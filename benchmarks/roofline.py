@@ -1,0 +1,130 @@
+"""Roofline analysis over the dry-run records (deliverable g).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+    MODEL_FLOPS     = 6*N*D (train) or 2*N_active*D (inference) per device
+    ratio           = MODEL_FLOPS / HLO_FLOPs (useful-compute fraction)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(x4 links per chip on the 2D torus; we report per-link worst case).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.data.pipeline import SHAPES
+from repro.models.config import get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch / chips
+
+
+def load_record(arch: str, shape: str, mesh: str,
+                dryrun_dir: str = DRYRUN_DIR,
+                prefix: str = "") -> Optional[dict]:
+    path = os.path.join(dryrun_dir, f"{prefix}{arch}_{shape}_{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_row(rec: dict) -> Optional[dict]:
+    if "skipped" in rec or "error" in rec:
+        return None
+    chips = 512 if rec["mesh"] == "pod2" else 256
+    flops = rec["flops_per_device"]
+    byts = rec["bytes_per_device"]
+    coll = rec["collective_bytes_per_device"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "attn": rec.get("attn", "full"),
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collective_bytes_per_device": coll,
+        "hbm_per_device_gib": sum(rec.get("memory", {}).get(k, 0) for k in
+                                  ("argument_size_in_bytes",
+                                   "temp_size_in_bytes",
+                                   "output_size_in_bytes")) / chips / 2**30,
+    }
+
+
+def full_table(mesh: str = "pod1", dryrun_dir: str = DRYRUN_DIR,
+               prefix: str = "") -> list[dict]:
+    from repro.models.config import list_archs
+    rows = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            rec = load_record(arch, shape, mesh, dryrun_dir, prefix)
+            if rec is None:
+                continue
+            if "skipped" in rec:
+                rows.append({"arch": arch, "shape": shape, "mesh": mesh,
+                             "skipped": rec["skipped"]})
+                continue
+            row = roofline_row(rec)
+            if row:
+                rows.append(row)
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':<22}{'shape':<13}{'attn':<8}{'compute_s':>10}"
+           f"{'memory_s':>10}{'collect_s':>10}  {'dominant':<11}"
+           f"{'useful':>7}{'hbm/dev':>9}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"{r['arch']:<22}{r['shape']:<13}SKIP: {r['skipped']}")
+            continue
+        lines.append(
+            f"{r['arch']:<22}{r['shape']:<13}{r['attn']:<8}"
+            f"{r['compute_s']:>10.4f}{r['memory_s']:>10.4f}"
+            f"{r['collective_s']:>10.4f}  {r['dominant']:<11}"
+            f"{r['useful_ratio']:>7.2f}{r['hbm_per_device_gib']:>8.2f}G")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh in ("pod1", "pod2"):
+        rows = full_table(mesh)
+        if rows:
+            print(f"\n===== roofline ({mesh}: "
+                  f"{512 if mesh == 'pod2' else 256} chips) =====")
+            print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV per the repository convention, and a
+roofline summary (from the dry-run artifacts) at the end.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (adaptive_runtime, fig3_cpu_gpu, fig6_location,
+                            kernel_sweep, roofline, solver_scaling,
+                            speedup_table, table1_catalog, tpu_fleet)
+
+    suites = [
+        ("fig3 (CPU/GPU selection)", fig3_cpu_gpu.run),
+        ("table1 (price disparity)", table1_catalog.run),
+        ("fig6 (location strategies)", fig6_location.run),
+        ("speedup (GPU vs fps)", speedup_table.run),
+        ("adaptive (rush hour)", adaptive_runtime.run),
+        ("solver scaling", solver_scaling.run),
+        ("tpu fleet (beyond-paper)", tpu_fleet.run),
+        ("pallas kernels (interpret-mode validation)", kernel_sweep.run),
+    ]
+    print("name,us_per_call,derived")
+    mismatches = 0
+    for title, fn in suites:
+        print(f"# --- {title} ---")
+        for row in fn():
+            ok = row.get("match_paper")
+            tail = "" if ok is None else ("  [MATCHES PAPER]" if ok
+                                          else "  [MISMATCH]")
+            if ok is False:
+                mismatches += 1
+            print(f"{row['name']},{row['us_per_call']:.1f},"
+                  f"\"{row['derived']}{tail}\"")
+
+    # roofline summary appendix (not CSV — table form)
+    try:
+        rows = roofline.full_table("pod1")
+        if rows:
+            print("\n# --- roofline (single pod, 256 chips; "
+                  "full table in EXPERIMENTS.md) ---")
+            print(roofline.format_table(rows))
+    except Exception as e:                      # dry-run not executed yet
+        print(f"# roofline skipped: {e}")
+
+    if mismatches:
+        print(f"# WARNING: {mismatches} cells mismatch the paper")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

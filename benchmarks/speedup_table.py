@@ -1,0 +1,21 @@
+"""Benchmark: GPU speedup vs frame rate (paper: 'up to 16 times' at the
+highest rates, '<5%' at the lowest) — the fact driving CPU/GPU choice."""
+from __future__ import annotations
+
+from repro.core.workload import VGG16, ZF
+
+
+def run() -> list[dict]:
+    rows = []
+    for prog in (VGG16, ZF):
+        for fps in (0.2, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0):
+            if fps > prog.max_gpu_fps():
+                continue
+            sp = prog.gpu_speedup(fps)
+            rows.append({"name": f"speedup_{prog.name}_{fps}fps",
+                         "us_per_call": 0.0,
+                         "derived": f"{sp:.2f}x"})
+        peak = prog.max_gpu_fps() / prog.max_cpu_fps(7.2)
+        rows.append({"name": f"speedup_{prog.name}_peak", "us_per_call": 0.0,
+                     "derived": f"{peak:.1f}x (paper: up to 16x)"})
+    return rows

@@ -1,0 +1,65 @@
+"""Long-context decoding across architecture families (reduced configs, CPU).
+
+Shows why the long_500k input shape is SSM/hybrid territory: the Mamba-2
+state is O(1) in context length, RecurrentGemma carries a window cache, and
+a dense model needs the sliding-window + ring-cache variant to stay
+sub-quadratic. Prints per-family cache sizes and a short greedy rollout.
+
+Run:  PYTHONPATH=src python examples/long_context_decode.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import get_config
+
+
+def cache_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def main() -> None:
+    ctx, new_tokens = 192, 8
+    rng = np.random.default_rng(0)
+    for arch, opts in [
+        ("mamba2-2.7b", M.ModelOptions(remat=False)),
+        ("recurrentgemma-9b", M.ModelOptions(remat=False)),
+        ("yi-9b", M.ModelOptions(remat=False, window_override=64,
+                                 ring_cache=True)),
+    ]:
+        cfg = get_config(arch, reduced=True)
+        params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, ctx)),
+                           jnp.int32)
+        logits, cache = M.prefill(params, {"tokens": toks}, cfg, opts,
+                                  cache_len=ctx + new_tokens)
+        # also show what the naive full cache would cost for the dense arch
+        naive = None
+        if arch == "yi-9b":
+            naive = M.init_cache(cfg, 1, ctx + new_tokens, jnp.float32,
+                                 M.ModelOptions(remat=False))
+        out = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(new_tokens):
+            out.append(int(tok[0]))
+            logits, cache = M.decode_step(params, tok,
+                                          jnp.asarray(ctx + i), cache,
+                                          cfg, opts)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        kb = cache_bytes(cache) / 1024
+        extra = ""
+        if naive is not None:
+            extra = (f"  (full-length cache would be "
+                     f"{cache_bytes(naive)/1024:.0f} KiB)")
+        print(f"{arch:22s} ctx={ctx}  cache={kb:8.0f} KiB{extra}  "
+              f"rollout={out}")
+
+    print("\nThe production long_500k dry-run runs mamba2/recurrentgemma "
+          "natively and dense archs with attn=sliding (see EXPERIMENTS.md); "
+          "perf iteration D1 shows the ring cache cutting the long-decode "
+          "memory term 47x.")
+
+
+if __name__ == "__main__":
+    main()

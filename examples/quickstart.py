@@ -1,0 +1,51 @@
+"""Quickstart: the paper's resource manager in five minutes.
+
+1. Reproduce a Fig. 3 scenario (CPU/GPU instance selection).
+2. Location-aware planning for worldwide cameras (Fig. 6 strategies).
+3. The same machinery planning a TPU serving fleet (beyond-paper).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (FIG3_SCENARIOS, ResourceManager, Stream,
+                        fig3_catalog, fig6_catalog, make_streams)
+from repro.core import geo
+from repro.core.tpu_catalog import LLMStream, plan_tpu_fleet
+from repro.core.workload import PROGRAMS
+
+
+def main() -> None:
+    # --- 1. Fig. 3 scenario 1: 1x VGG16@0.25fps + 3x ZF@0.55fps ----------
+    mgr = ResourceManager(fig3_catalog())
+    streams = make_streams(FIG3_SCENARIOS[1])
+    print("=== Fig. 3 scenario 1 ===")
+    for strategy in ("ST1", "ST2", "ST3"):
+        plan = mgr.plan_or_fail(streams, strategy)
+        print(f"  {strategy}: "
+              + ("Fail" if plan is None else
+                 f"${plan.hourly_cost:.3f}/h  {plan.instance_counts()}"))
+    plan = mgr.plan(streams, "ST3")
+    print("  placement detail:")
+    for u in mgr.utilization(plan):
+        print(f"    {u['instance']}: {u['streams']}")
+
+    # --- 2. worldwide cameras, 1 fps target ------------------------------
+    print("\n=== Fig. 6 strategies (12 worldwide cameras, ZF @ 1 fps) ===")
+    mgr6 = ResourceManager(fig6_catalog())
+    cams = [Stream(f"zf-{c}", PROGRAMS["ZF"], fps=1.0, camera=c)
+            for c in geo.CAMERAS]
+    for strategy in ("NL", "ARMVAC", "GCL"):
+        plan = mgr6.plan(cams, strategy, target_fps=1.0)
+        print(f"  {strategy:7s}: ${plan.hourly_cost:.3f}/h")
+
+    # --- 3. beyond-paper: TPU fleet for LLM streams ----------------------
+    print("\n=== TPU v5e fleet for LLM serving streams (beyond-paper) ===")
+    llm = ([LLMStream(f"edge{i}", "olmo-1b", tokens_per_s=60)
+            for i in range(6)]
+           + [LLMStream(f"big{i}", "yi-9b", tokens_per_s=40)
+              for i in range(3)])
+    for st in ("per-stream", "uniform-big", "packed"):
+        print(f"  {st:12s}: {plan_tpu_fleet(llm, strategy=st)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Assigned architecture configs. Each module registers a full config (exact
+sizes from the source paper/model card) and a REDUCED variant (<=2 layers,
+d_model<=512, <=4 experts) used by the CPU smoke tests."""
+from repro.models.config import get_config, list_archs  # re-export
+
+__all__ = ["get_config", "list_archs"]

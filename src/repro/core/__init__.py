@@ -1,0 +1,27 @@
+"""Core: the paper's cloud resource-allocation manager.
+
+Public API:
+    Catalog / InstanceType / fig3_catalog / fig6_catalog / table1_catalog
+    Stream / AnalysisProgram / VGG16 / ZF / FIG3_SCENARIOS / make_streams
+    ResourceManager / AdaptiveManager / Plan
+    strategies: ST1/ST2/ST3 (CPU-GPU), NL/ARMVAC/GCL (location-aware)
+    solver: exact branch-and-bound MDMC vector-bin-packing
+    arcflow: Brandão–Pedroso arc-flow graphs with compression
+"""
+from repro.core.adaptive import AdaptiveManager
+from repro.core.catalog import (Catalog, InstanceType, UTILIZATION_CAP,
+                                fig3_catalog, fig6_catalog, table1_catalog)
+from repro.core.manager import ResourceManager
+from repro.core.packing import (Bin, Choice, Infeasible, Item, Problem,
+                                Solution, validate)
+from repro.core.strategies import Plan, STRATEGIES, build_problem
+from repro.core.workload import (FIG3_SCENARIOS, PROGRAMS, VGG16, ZF,
+                                 AnalysisProgram, Stream, make_streams)
+
+__all__ = [
+    "AdaptiveManager", "AnalysisProgram", "Bin", "Catalog", "Choice",
+    "FIG3_SCENARIOS", "Infeasible", "InstanceType", "Item", "PROGRAMS",
+    "Plan", "Problem", "ResourceManager", "STRATEGIES", "Solution", "Stream",
+    "UTILIZATION_CAP", "VGG16", "ZF", "build_problem", "fig3_catalog",
+    "fig6_catalog", "make_streams", "table1_catalog", "validate",
+]

@@ -1,0 +1,107 @@
+"""Adaptive runtime resource management [6,14].
+
+Demands vary (rush hour, content complexity). The adaptive manager monitors
+the demanded frame rates, re-solves when the current plan is infeasible or
+when re-solving would save enough to justify migration, and applies
+hysteresis so it does not thrash.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from repro.core.catalog import Catalog
+from repro.core.manager import ResourceManager
+from repro.core.packing import Infeasible, fits
+from repro.core.strategies import Plan
+from repro.core.workload import Stream
+
+
+@dataclasses.dataclass
+class AdaptiveEvent:
+    t: int
+    action: str            # "keep" | "replan" | "forced-replan"
+    hourly_cost: float
+    migrations: int
+
+
+@dataclasses.dataclass
+class AdaptiveManager:
+    """Replans when demand drifts.
+
+    ``savings_threshold``: fraction of current cost a replan must save to be
+    worth the migration disruption (hysteresis). A plan that can no longer
+    serve the demanded rates forces a replan regardless.
+    """
+
+    manager: ResourceManager
+    strategy: str = "ST3"
+    savings_threshold: float = 0.10
+    target_fps: Optional[float] = None
+
+    current: Optional[Plan] = None
+    events: list = dataclasses.field(default_factory=list)
+
+    def _plan_feasible_for(self, plan: Plan, streams: Sequence[Stream]) -> bool:
+        """Can the already-rented instances serve the new demands in place?
+
+        Each stream stays on its assigned instance; we recompute its
+        requirement at the new fps and check capacities.
+        """
+        by_key = {s.stream_id: s for s in streams}
+        for b in plan.solution.bins:
+            ch = plan.problem.choices[b.choice]
+            used = [0.0] * plan.problem.ndim
+            for i in b.items:
+                key = plan.problem.items[i].key
+                s = by_key.get(key)
+                if s is None:
+                    continue
+                itype = self.manager.catalog.get(ch.type_name)
+                req = s.requirement_for(itype)
+                if req is None:
+                    return False
+                if not fits(req, used, ch.capacity):
+                    return False
+                used = [u + r for u, r in zip(used, req)]
+        return True
+
+    def step(self, t: int, streams: Sequence[Stream]) -> Plan:
+        """One control-loop tick with the current demanded streams."""
+        if self.current is None:
+            self.current = self.manager.plan(streams, self.strategy, self.target_fps)
+            self.events.append(AdaptiveEvent(t, "replan", self.current.hourly_cost,
+                                             migrations=len(streams)))
+            return self.current
+
+        feasible = self._plan_feasible_for(self.current, streams)
+        candidate = self.manager.plan(streams, self.strategy, self.target_fps)
+        if not feasible:
+            migrations = _count_migrations(self.current, candidate)
+            self.current = candidate
+            self.events.append(AdaptiveEvent(t, "forced-replan",
+                                             candidate.hourly_cost, migrations))
+        elif candidate.hourly_cost < self.current.hourly_cost * (1 - self.savings_threshold):
+            migrations = _count_migrations(self.current, candidate)
+            self.current = candidate
+            self.events.append(AdaptiveEvent(t, "replan", candidate.hourly_cost,
+                                             migrations))
+        else:
+            self.events.append(AdaptiveEvent(t, "keep", self.current.hourly_cost, 0))
+        return self.current
+
+    def total_cost(self) -> float:
+        """Integrated cost over all ticks (1 tick = 1 hour)."""
+        return sum(e.hourly_cost for e in self.events)
+
+
+def _count_migrations(old: Plan, new: Plan) -> int:
+    def assignment(plan: Plan) -> dict[str, str]:
+        out = {}
+        for b in plan.solution.bins:
+            ch = plan.problem.choices[b.choice]
+            for i in b.items:
+                out[plan.problem.items[i].key] = ch.key
+        return out
+    a, b = assignment(old), assignment(new)
+    return sum(1 for k in b if a.get(k) != b[k])

@@ -1,0 +1,55 @@
+"""Resource manager facade (Fig. 1 of the paper).
+
+Inputs: the analysis programs and their per-stream requirements, desired frame
+rates, camera locations, and the instance catalog. Output: a Plan — which
+instances to rent where, and which streams run on each.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core import strategies
+from repro.core.catalog import Catalog
+from repro.core.packing import Infeasible
+from repro.core.strategies import Plan
+from repro.core.workload import Stream
+
+
+@dataclasses.dataclass
+class ResourceManager:
+    catalog: Catalog
+    default_strategy: str = "ST3"
+
+    def plan(self, streams: Sequence[Stream], strategy: Optional[str] = None,
+             target_fps: Optional[float] = None) -> Plan:
+        name = strategy or self.default_strategy
+        fn = strategies.STRATEGIES[name]
+        if name in ("NL", "ARMVAC", "ARMVAC+", "GCL"):
+            if target_fps is None:
+                raise ValueError(f"{name} requires target_fps")
+            return fn(streams, self.catalog, target_fps)
+        return fn(streams, self.catalog)
+
+    def plan_or_fail(self, streams: Sequence[Stream], strategy: str,
+                     target_fps: Optional[float] = None):
+        """Like plan() but returns None on infeasibility (Fig. 3 'Fail' cells)."""
+        try:
+            return self.plan(streams, strategy, target_fps)
+        except Infeasible:
+            return None
+
+    def utilization(self, plan: Plan) -> list[dict]:
+        """Per-instance utilization report; the 90% cap is already inside the
+        usable capacities, so fractions here are of the *usable* envelope."""
+        out = []
+        for b in plan.solution.bins:
+            ch = plan.problem.choices[b.choice]
+            used = b.used(plan.problem)
+            frac = tuple((u / c if c > 0 else 0.0) for u, c in zip(used, ch.capacity))
+            out.append({
+                "instance": ch.key,
+                "streams": [plan.problem.items[i].key for i in b.items],
+                "utilization_of_usable": tuple(round(f, 3) for f in frac),
+            })
+        return out

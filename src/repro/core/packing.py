@@ -1,0 +1,124 @@
+"""Problem definition for multi-dimensional multiple-choice vector bin packing.
+
+Items (streams) must each be assigned to exactly one bin. A bin is an instance
+of a *choice* = (instance type, location); each choice has a usable capacity
+vector (after the 90% head-room rule) and an hourly price. The requirement
+vector of an item may differ per choice (CPU vs GPU execution profile) and may
+be None (incompatible: program needs a GPU, or the camera's RTT circle
+excludes the location). Objective: minimize total hourly price.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    """One (instance type, location) option — a truck model in the analogy."""
+
+    key: str                      # e.g. "g2.2xlarge@us-east-1"
+    type_name: str
+    location: str
+    capacity: tuple[float, ...]   # usable capacity (90%-capped)
+    price: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Item:
+    """One stream; requirements[c] is its vector under choice c (None = incompatible)."""
+
+    key: str
+    requirements: tuple[Optional[tuple[float, ...]], ...]
+
+    def compatible(self) -> list[int]:
+        return [c for c, r in enumerate(self.requirements) if r is not None]
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    choices: tuple[Choice, ...]
+    items: tuple[Item, ...]
+
+    def __post_init__(self) -> None:
+        dims = {len(c.capacity) for c in self.choices}
+        if len(dims) > 1:
+            raise ValueError("inconsistent capacity dimensionality")
+        (d,) = dims or {0}
+        for it in self.items:
+            if len(it.requirements) != len(self.choices):
+                raise ValueError(f"item {it.key}: requirements must align with choices")
+            for r in it.requirements:
+                if r is not None and len(r) != d:
+                    raise ValueError(f"item {it.key}: bad vector length")
+
+    @property
+    def ndim(self) -> int:
+        return len(self.choices[0].capacity)
+
+
+@dataclasses.dataclass
+class Bin:
+    """An opened instance: which choice it is and what is packed inside."""
+
+    choice: int
+    items: list[int] = dataclasses.field(default_factory=list)
+
+    def used(self, problem: Problem) -> tuple[float, ...]:
+        d = problem.ndim
+        tot = [0.0] * d
+        for i in self.items:
+            r = problem.items[i].requirements[self.choice]
+            assert r is not None
+            for k in range(d):
+                tot[k] += r[k]
+        return tuple(tot)
+
+
+@dataclasses.dataclass
+class Solution:
+    bins: list[Bin]
+    cost: float
+    optimal: bool = False
+    note: str = ""
+
+    def instance_counts(self, problem: Problem) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for b in self.bins:
+            k = problem.choices[b.choice].key
+            out[k] = out.get(k, 0) + 1
+        return out
+
+
+class Infeasible(Exception):
+    """No assignment exists (e.g. Fig. 3 scenario 3 under CPU-only strategy)."""
+
+
+def validate(problem: Problem, sol: Solution) -> None:
+    """Assert solution invariants: coverage, capacity, cost accounting."""
+    seen: set[int] = set()
+    cost = 0.0
+    for b in sol.bins:
+        ch = problem.choices[b.choice]
+        cost += ch.price
+        used = b.used(problem)
+        for k in range(problem.ndim):
+            if used[k] > ch.capacity[k] + 1e-6:
+                raise AssertionError(
+                    f"bin {ch.key} overfull in dim {k}: {used[k]} > {ch.capacity[k]}")
+        for i in b.items:
+            if i in seen:
+                raise AssertionError(f"item {i} assigned twice")
+            seen.add(i)
+            if problem.items[i].requirements[b.choice] is None:
+                raise AssertionError(f"item {i} incompatible with {ch.key}")
+    if seen != set(range(len(problem.items))):
+        raise AssertionError(f"items not covered: {set(range(len(problem.items))) - seen}")
+    if abs(cost - sol.cost) > 1e-6:
+        raise AssertionError(f"cost mismatch: {cost} vs {sol.cost}")
+
+
+def fits(req: Sequence[float], used: Sequence[float], cap: Sequence[float]) -> bool:
+    return all(u + r <= c + EPS for r, u, c in zip(req, used, cap))

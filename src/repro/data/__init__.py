@@ -1,0 +1,5 @@
+from repro.data.pipeline import (InputShape, SHAPES, make_batch,
+                                 input_specs, synthetic_batch_iterator)
+
+__all__ = ["InputShape", "SHAPES", "make_batch", "input_specs",
+           "synthetic_batch_iterator"]

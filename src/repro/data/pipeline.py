@@ -1,0 +1,105 @@
+"""Deterministic synthetic data pipeline + ShapeDtypeStruct input specs.
+
+The four assigned input shapes are defined here. ``input_specs`` produces the
+no-allocation stand-ins used by the multi-pod dry-run; ``make_batch`` produces
+real (deterministic) arrays for the CPU smoke tests and examples.
+
+Frontend carve-out: for [audio]/[vlm] architectures the modality encoder is
+stubbed — specs provide frame/patch *embeddings* of the right shape directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _token_spec(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, *,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this step kind."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            specs = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype)}
+        elif cfg.frontend == "vision":
+            P = cfg.num_patches
+            specs = {"tokens": _token_spec((B, S - P)),
+                     "patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                          dtype)}
+        else:
+            specs = {"tokens": _token_spec((B, S))}
+        if shape.kind == "train":
+            specs["labels"] = _token_spec((B, S))
+        return specs
+    # decode: one token + position (cache comes separately)
+    return {"token": _token_spec((B,)), "pos": _token_spec((), jnp.int32)}
+
+
+def make_batch(cfg: ArchConfig, shape: InputShape, seed: int = 0, *,
+               dtype=jnp.float32) -> dict:
+    """Real deterministic arrays matching input_specs."""
+    rng = np.random.default_rng(seed)
+    B, S = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            out["frames"] = jnp.asarray(
+                rng.standard_normal((B, S, cfg.d_model), dtype=np.float32),
+                dtype=dtype)
+        elif cfg.frontend == "vision":
+            P = cfg.num_patches
+            out["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S - P)), dtype=jnp.int32)
+            out["patch_embeds"] = jnp.asarray(
+                rng.standard_normal((B, P, cfg.d_model), dtype=np.float32),
+                dtype=dtype)
+        else:
+            out["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), dtype=jnp.int32)
+        if shape.kind == "train":
+            labels = rng.integers(0, cfg.vocab_size, (B, S))
+            if cfg.frontend == "vision":
+                labels[:, : cfg.num_patches] = -100      # no loss on patches
+            if cfg.frontend == "audio":
+                # masked prediction: loss on a random 8% of frames
+                mask = rng.random((B, S)) < 0.08
+                labels = np.where(mask, labels % cfg.vocab_size, -100)
+            out["labels"] = jnp.asarray(labels, dtype=jnp.int32)
+    else:
+        out["token"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B,)),
+                                   dtype=jnp.int32)
+        out["pos"] = jnp.asarray(min(128, shape.seq_len - 1), dtype=jnp.int32)
+    return out
+
+
+def synthetic_batch_iterator(cfg: ArchConfig, shape: InputShape, *,
+                             dtype=jnp.float32, start_seed: int = 0):
+    """Endless deterministic stream of training batches."""
+    seed = start_seed
+    while True:
+        yield make_batch(cfg, shape, seed=seed, dtype=dtype)
+        seed += 1

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel. The pytest sweeps assert
+allclose(kernel(interpret=True), ref) across shapes/dtypes."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,S,H,hd); k,v: (B,T,K,hd) with H % K == 0. Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    srange = jnp.arange(S)
+    trange = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    off = T - S  # queries are the last S positions when T > S
+    if causal:
+        mask &= trange[None, :] <= srange[:, None] + off
+    if window > 0:
+        mask &= trange[None, :] > srange[:, None] + off - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD oracle (same math as models.ssm.ssd_scan_ref; duplicated so
+    kernels/ has a self-contained oracle). x: (b,s,h,p); dt: (b,s,h); A: (h,);
+    Bm, Cm: (b,s,g,n)."""
+    from repro.models.ssm import ssd_scan_ref as _impl
+    return _impl(x, dt, A, Bm, Cm, chunk)
+
+
+def ssd_scan_naive(x, dt, A, Bm, Cm):
+    """O(S) sequential state recurrence — the ground-truth definition."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    dA = jnp.exp(dt * A)                                    # (b,s,h)
+
+    def step(state, inp):
+        dA_t, dt_t, B_t, C_t, x_t = inp
+        state = state * dA_t[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt_t, B_t, x_t)
+        y = jnp.einsum("bhn,bhpn->bhp", C_t, state)
+        return state, y
+
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0),
+          jnp.moveaxis(x.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, jnp.zeros((b, h, p, n), jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t over axis 1. a, b: (B, S, W)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,35 @@
+"""Recompute roofline fields of dry-run JSONs from their stored (gzipped)
+HLO dumps — lets the HLO analyzer evolve without recompiling 80 combos.
+
+Usage: python -m repro.launch.reanalyze [--dir experiments/dryrun]
+"""
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        with open(jpath) as f:
+            rec = json.load(f)
+        hp = rec.get("hlo_path")
+        if not hp or not os.path.exists(hp):
+            continue
+        with gzip.open(hp, "rt") as hf:
+            rec.update(analyze_hlo(hf.read()))
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=2)
+        n += 1
+    print(f"reanalyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serving launcher: allocation-managed multi-stream serving demo.
+
+Plans a fleet with the resource manager (the paper's contribution), then
+serves simulated camera streams on the planned engines and reports cost +
+throughput. CPU-sized by default (reduced configs); the same flow drives
+full configs on real slices.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tpu_catalog import LLMStream, plan_tpu_fleet
+from repro.models import model as M
+from repro.models.config import get_config, list_archs
+from repro.serving import ServingEngine, StreamSimulator
+
+
+def serve(arch: str = "olmo-1b", *, n_streams: int = 4, fps: float = 2.0,
+          seconds: int = 3, reduced: bool = True,
+          dryrun_dir: str | None = None) -> dict:
+    # 1) plan the fleet with the paper's packing machinery
+    streams = [LLMStream(f"cam-{i}", arch, tokens_per_s=fps * 8)
+               for i in range(n_streams)]
+    plans = {s: plan_tpu_fleet(streams, dryrun_dir=dryrun_dir, strategy=s)
+             for s in ("per-stream", "uniform-big", "packed")}
+
+    # 2) serve the streams (reduced config on CPU)
+    cfg = get_config(arch, reduced=reduced)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    engine = ServingEngine(cfg, params, max_batch=8, cache_len=128)
+    sim = StreamSimulator(engine, prompt_len=32, new_tokens=8)
+    done = []
+    for t in range(seconds):
+        sim.tick({f"cam-{i}": fps for i in range(n_streams)}, dt_s=1.0)
+        done.extend(engine.drain())
+    packed, per_stream = plans["packed"], plans["per-stream"]
+    savings = 1.0 - packed["hourly_cost"] / per_stream["hourly_cost"]
+    return {
+        "arch": arch,
+        "frames_served": len(done),
+        "tokens_per_s": round(engine.throughput_tokens_per_s(), 1),
+        "fleet_plans": plans,
+        "packed_vs_per_stream_savings": round(savings, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="olmo-1b")
+    ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--fps", type=float, default=2.0)
+    ap.add_argument("--seconds", type=int, default=3)
+    ap.add_argument("--dryrun-dir", default=None)
+    args = ap.parse_args()
+    out = serve(args.arch, n_streams=args.streams, fps=args.fps,
+                seconds=args.seconds, dryrun_dir=args.dryrun_dir)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Baseline policy (recorded as such in EXPERIMENTS.md §Perf):
+  * tensor-parallel over "model": attention heads, FFN hidden, experts,
+    SSD inner dim, RG-LRU width, vocab (embedding rows / lm_head cols)
+  * batch-parallel over ("pod","data")
+  * ``fsdp=True`` additionally shards the non-model major dim of large
+    2D+ weights over "data" (needed for >=9B params on 16 GB v5e chips)
+  * long-context decode (batch 1): KV-cache sequence axis sharded over the
+    data axes instead of batch
+Scan-stacked parameters (leading repeat dim) get None prepended.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.pipeline import InputShape
+from repro.models.config import ArchConfig
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = False                 # shard major dims over "data" as well
+    shard_seq_in_long_decode: bool = True
+    # perf iteration 1 (grok-1): when experts don't divide the model axis,
+    # shard the expert matmul dims instead of replicating. False reproduces
+    # the pre-iteration baseline.
+    expert_fallback_shard: bool = True
+    # perf iteration 3 (yi-9b decode): shard the KV-cache sequence axis over
+    # "model" when kv heads don't divide it (False = shard head_dim).
+    decode_seq_over_model: bool = False
+
+    @staticmethod
+    def for_arch(cfg: ArchConfig) -> "ShardingPolicy":
+        big = cfg.param_count() >= 8e9
+        return ShardingPolicy(fsdp=big)
+
+
+def _dp(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _fsdp_axis(mesh: Mesh, policy: ShardingPolicy) -> Optional[str]:
+    return "data" if (policy.fsdp and "data" in mesh.axis_names) else None
+
+
+def param_spec(path: str, leaf, mesh: Mesh, policy: ShardingPolicy,
+               stacked: bool) -> P:
+    """PartitionSpec for one parameter leaf, identified by its key path.
+
+    Every axis assignment is divisibility-checked against the mesh (explicit
+    in_shardings reject padding); on failure the rule falls through an
+    alternative-dims chain and ultimately replicates. This is what lets odd
+    vocabularies (50280, 151655, 504) and grok's 8 experts < 16-way model
+    axis lower cleanly.
+    """
+    fa = _fsdp_axis(mesh, policy)
+    name = path.split("/")[-1]
+    offset = 1 if stacked else 0
+    ndim = leaf.ndim - offset
+    shape = leaf.shape[offset:]
+
+    def _ok(dim: int, axis) -> bool:
+        if axis is None:
+            return True
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return shape[dim] % n == 0
+
+    def out(*axes):
+        axes = list(axes) + [None] * (ndim - len(axes))
+        used: set = set()
+        clean = []
+        for d, a in enumerate(axes):
+            if a is not None and _ok(d, a) and a not in used:
+                clean.append(a)
+                used.add(a)
+            else:
+                clean.append(None)
+        if stacked:
+            clean = [None] + clean
+        return P(*clean)
+
+    def chain(*candidates):
+        """First candidate whose every axis divides evenly wins."""
+        for cand in candidates:
+            full = list(cand) + [None] * (ndim - len(cand))
+            if all(a is None or _ok(d, a) for d, a in enumerate(full)):
+                return out(*cand)
+        return out()
+
+    if name == "embedding":                        # (V, D)
+        return chain(("model", fa), (None, "model"))
+    if name == "lm_head":                          # (D, V)
+        return chain((fa, "model"), ("model", fa))
+    if name in ("wq", "wk", "wv", "w1", "w3", "wx", "wgate", "in_proj"):
+        if ndim == 3:                              # moe (E, D, F)
+            # expert-parallel when E divides the model axis; otherwise shard
+            # the matmul dims fully (perf iteration 1: grok's 8 experts on a
+            # 16-way model axis must not fall back to replication)
+            if policy.expert_fallback_shard:
+                return chain(("model", fa, None), (None, fa, "model"),
+                             (None, None, "model"), (None, fa, None))
+            return chain(("model", fa, None), (fa, None, "model"))
+        return chain((fa, "model"), ("model", fa))
+    if name in ("wo", "w2", "out_proj"):
+        if ndim == 3:                              # moe (E, F, D)
+            if policy.expert_fallback_shard:
+                return chain(("model", None, fa), (None, "model", fa),
+                             (None, "model", None), (None, None, fa))
+            return chain(("model", None, fa), (fa, "model", None))
+        return chain(("model", fa), (fa, "model"))
+    if name in ("wr", "wi"):                       # rg-lru gates (W, W)
+        return chain((fa, "model"))
+    if name == "router":
+        return out()
+    if name == "conv_w":
+        return chain((None, "model"))
+    if name in ("conv_b", "norm_scale", "lam"):
+        return chain(("model",))
+    if name in ("A_log", "D", "dt_bias", "scale", "bias"):
+        return out()
+    if name == "step":
+        return P()
+    return P(*([None] * leaf.ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def params_specs(params: Pytree, mesh: Mesh, policy: ShardingPolicy) -> Pytree:
+    def spec_of(path, leaf):
+        s = _path_str(path)
+        stacked = "/scan/" in f"/{s}/"
+        # inside the scan group, leaves carry a leading repeat dimension
+        return param_spec(s, leaf, mesh, policy, stacked=stacked)
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def state_specs(state: Pytree, mesh: Mesh, policy: ShardingPolicy) -> Pytree:
+    """Train state {params, opt{m,v,step}} — opt mirrors params."""
+    p_spec = params_specs(state["params"], mesh, policy)
+    return {
+        "params": p_spec,
+        "opt": {
+            "m": jax.tree.map(lambda s: s, p_spec),
+            "v": jax.tree.map(lambda s: s, p_spec),
+            "step": P(),
+        },
+    }
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> dict:
+    dp = _dp(mesh)
+    bp = P(dp) if shape.global_batch > 1 else P(None)
+    if shape.kind in ("train", "prefill"):
+        specs: dict = {}
+        if cfg.frontend == "audio":
+            specs["frames"] = P(dp if shape.global_batch > 1 else None,
+                                None, None)
+        elif cfg.frontend == "vision":
+            specs["tokens"] = P(dp if shape.global_batch > 1 else None, None)
+            specs["patch_embeds"] = P(dp if shape.global_batch > 1 else None,
+                                      None, None)
+        else:
+            specs["tokens"] = P(dp if shape.global_batch > 1 else None, None)
+        if shape.kind == "train":
+            specs["labels"] = P(dp if shape.global_batch > 1 else None, None)
+        return specs
+    return {"token": bp, "pos": P()}
+
+
+def _cache_leaf_spec(path: str, leaf, cfg: ArchConfig, shape: InputShape,
+                     mesh: Mesh, policy: ShardingPolicy) -> P:
+    dp = _dp(mesh)
+    name = path.split("/")[-1]
+    batched = shape.global_batch > 1
+    stacked = leaf.ndim > {"k": 4, "v": 4, "state": 4, "conv": 3, "h": 2}.get(name, 99)
+    shard_seq = (not batched) and policy.shard_seq_in_long_decode
+    # kv heads shard over "model" only when they divide it evenly; otherwise
+    # shard head_dim (no padding, contraction becomes a psum)
+    msize = mesh.shape["model"]
+    kv_axis_on_heads = cfg.num_kv_heads % msize == 0
+
+    def out(*axes):
+        axes = list(axes)
+        if stacked:
+            axes = [None] + axes
+        return P(*axes)
+
+    if name in ("k", "v"):       # (B, L, K, hd)
+        if kv_axis_on_heads:
+            mid = (None, "model", None)        # (L, K, hd)
+        elif policy.decode_seq_over_model and leaf.shape[-3] % msize == 0:
+            mid = ("model", None, None)        # shard cache seq over model
+        else:
+            mid = (None, None, "model")        # shard head_dim
+        if batched:
+            return out(dp, *mid)
+        if shard_seq and mid[0] is None:
+            return out(None, dp, *mid[1:])
+        return out(None, *mid)
+    if name == "state":          # ssd (B, H, P, N)
+        return out(dp if batched else None, "model", None, None)
+    if name == "conv":           # (B, W-1, C)
+        return out(dp if batched else None, None, "model")
+    if name == "h":              # rglru (B, W)
+        return out(dp if batched else None, "model")
+    return P(*([None] * leaf.ndim))
+
+
+def cache_specs(cache: Pytree, cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                policy: ShardingPolicy) -> Pytree:
+    def spec_of(path, leaf):
+        return _cache_leaf_spec(_path_str(path), leaf, cfg, shape, mesh, policy)
+    return jax.tree_util.tree_map_with_path(spec_of, cache)
+
+
+def to_named(spec_tree: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

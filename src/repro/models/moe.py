@@ -1,0 +1,248 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-based scatter dispatch.
+
+Baseline dispatch is the GShard/MaxText-style capacity pattern expressed with
+scatter/gather (token -> expert slot), which XLA turns into the expected
+all-to-all when experts are sharded over the "model" mesh axis. The router
+aux (load-balance) loss follows Switch/GShard: E * sum_e f_e * P_e.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+def init_moe(cfg: ArchConfig, key, dtype):
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(D)
+    s_out = 1.0 / math.sqrt(F) / math.sqrt(2 * cfg.num_layers)
+    p = {
+        "router": (jax.random.normal(k1, (D, E)) * s_in).astype(dtype),
+        "w1": (jax.random.normal(k2, (E, D, F)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k3, (E, F, D)) * s_out).astype(dtype),
+    }
+    if cfg.gated:
+        p["w3"] = (jax.random.normal(k4, (E, D, F)) * s_in).astype(dtype)
+    return p
+
+
+def _act(x, kind):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    r = jax.nn.relu(x)
+    return r * r
+
+
+def apply_moe_local(params, x, cfg: ArchConfig):
+    """Per-sequence dispatch (perf iteration 2).
+
+    The global dispatch below computes slot positions with a cumsum over the
+    flattened (T*K, E) one-hot across ALL tokens; with tokens sharded over
+    the data axis GSPMD implements that sequential dependency by gathering
+    routing state globally (measured: the dominant collective in MoE
+    prefill). Here positions are computed per sequence — every op keeps the
+    batch dim, so routing stays local to the data shard and the only
+    cross-shard traffic is the unavoidable token<->expert all-to-all at the
+    expert matmul. Capacity becomes per-sequence: C = ceil(S*K/E * cf).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    logits = (x @ params["router"]).astype(jnp.float32)          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, K)                     # (B,S,K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(top_ids, E, dtype=jnp.float32)       # (B,S,K,E)
+    f_e = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e) / K
+
+    C = int(math.ceil(S * K / E * cfg.capacity_factor))
+    C = max(4, -(-C // 4) * 4)
+
+    ohf = onehot.reshape(B, S * K, E)
+    pos_all = jnp.cumsum(ohf, axis=1) - ohf
+    pos = jnp.sum(pos_all * ohf, axis=-1).astype(jnp.int32)      # (B, S*K)
+    ids_f = top_ids.reshape(B, S * K)
+    w_f = top_w.reshape(B, S * K)
+    within = pos < C
+    dest = jnp.where(within, ids_f * C + pos, E * C)             # (B, S*K)
+
+    token_of = jnp.repeat(jnp.arange(S), K)                      # (S*K,)
+    slots = E * C + 1
+    flat_dest = (dest + jnp.arange(B)[:, None] * slots).reshape(-1)
+    token_idx = (token_of[None, :] + jnp.arange(B)[:, None] * S).reshape(-1)
+    xf = x.reshape(B * S, D)
+    buf = jnp.zeros((B * slots, D), x.dtype)
+    buf = buf.at[flat_dest].add(xf[token_idx] *
+                                within.reshape(-1)[:, None].astype(x.dtype))
+    expert_in = buf.reshape(B, slots, D)[:, : E * C].reshape(B, E, C, D)
+
+    h = _act(jnp.einsum("becd,edf->becf", expert_in, params["w1"]),
+             cfg.activation)
+    if cfg.gated:
+        h = h * jnp.einsum("becd,edf->becf", expert_in, params["w3"])
+    out_slots = jnp.einsum("becf,efd->becd", h, params["w2"])
+    out_slots = out_slots.reshape(B, E * C, D)
+    out_slots = jnp.concatenate(
+        [out_slots, jnp.zeros((B, 1, D), out_slots.dtype)], axis=1)
+
+    gathered = jnp.take_along_axis(out_slots, dest[..., None], axis=1)
+    gathered = gathered * (w_f * within).astype(x.dtype)[..., None]
+    out = jnp.zeros((B * S, D), x.dtype).at[token_idx].add(
+        gathered.reshape(-1, D))
+    return out.reshape(B, S, D), aux.astype(jnp.float32)
+
+
+def apply_moe(params, x, cfg: ArchConfig, local_dispatch: bool = False,
+              expert_shard_constraint: bool = False):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    ``expert_shard_constraint`` (perf iteration B4) pins the dispatch buffer
+    and expert outputs to P("model") on the expert dim: tokens are
+    replicated over the model axis, so each shard materializes only its own
+    experts' slots and the combine reduces with one psum of (T, D) instead
+    of all-reducing (E*C, D) buffers. Requires E %% model_axis == 0.
+    """
+    if local_dispatch:
+        return apply_moe_local(params, x, cfg)
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = (xf @ params["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, K)                      # (T, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)        # renormalize
+
+    # load-balance aux loss (computed before capacity drop, as in GShard)
+    onehot_full = jax.nn.one_hot(top_ids, E, dtype=jnp.float32)   # (T, K, E)
+    f_e = jnp.mean(jnp.sum(onehot_full, axis=1), axis=0)          # fraction per expert
+    p_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * p_e) / K
+
+    # capacity
+    C = int(math.ceil(T * K / E * cfg.capacity_factor))
+    C = max(4, -(-C // 4) * 4)
+
+    # position of each (t, k) routing entry within its expert (row-major t, k)
+    oh = onehot_full.reshape(T * K, E)
+    pos_in_e = (jnp.cumsum(oh, axis=0) - oh)                      # entries before me
+    pos = jnp.sum(pos_in_e * oh, axis=-1).astype(jnp.int32)       # (T*K,)
+    ids_flat = top_ids.reshape(T * K)
+    w_flat = top_w.reshape(T * K)
+    within = pos < C
+    dest = jnp.where(within, ids_flat * C + pos, E * C)           # overflow slot
+
+    # dispatch: expert_in[e, c] = x_t for the entry routed there
+    token_of_entry = jnp.repeat(jnp.arange(T), K)
+    buf = jnp.zeros((E * C + 1, D), dtype=x.dtype)
+    buf = buf.at[dest].add(xf[token_of_entry] *
+                           within[:, None].astype(x.dtype))
+    expert_in = buf[: E * C].reshape(E, C, D)
+    if expert_shard_constraint:
+        from jax.sharding import PartitionSpec as P
+        expert_in = jax.lax.with_sharding_constraint(
+            expert_in, P("model", None, None))
+
+    # expert computation (E sharded over the "model" axis -> local matmuls)
+    h = _act(jnp.einsum("ecd,edf->ecf", expert_in, params["w1"]), cfg.activation)
+    if cfg.gated:
+        h = h * jnp.einsum("ecd,edf->ecf", expert_in, params["w3"])
+    out_slots = jnp.einsum("ecf,efd->ecd", h, params["w2"])
+    if expert_shard_constraint:
+        from jax.sharding import PartitionSpec as P
+        out_slots = jax.lax.with_sharding_constraint(
+            out_slots, P("model", None, None))
+    out_slots = out_slots.reshape(E * C, D)
+    out_slots = jnp.concatenate([out_slots, jnp.zeros((1, D), out_slots.dtype)])
+
+    # combine: weighted gather back to tokens
+    gathered = out_slots[dest] * (w_flat * within).astype(x.dtype)[:, None]
+    out = jnp.zeros((T, D), x.dtype).at[token_of_entry].add(gathered)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)
+
+
+def apply_moe_shard_map(params, x, cfg: ArchConfig, mesh,
+                        dp_axes: tuple = ("data",)):
+    """Expert-parallel MoE with explicit shard_map (perf iteration B5).
+
+    Layout: tokens sharded over the data axes and replicated over "model";
+    expert weights sharded over "model" on the expert dim. Each device
+    routes its local tokens, dispatches ONLY to the experts it owns, runs
+    them locally, and the weighted partial outputs are combined with a
+    single psum over "model" — the (E*C, D) buffer all-reduce of the GSPMD
+    formulation disappears by construction. Requires E % model_axis == 0.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    E, K = cfg.num_experts, cfg.experts_per_token
+    msize = mesh.shape["model"]
+    assert E % msize == 0, (E, msize)
+    E_loc = E // msize
+
+    def body(router, w1, w2, w3, xl):
+        # xl: (B_loc, S, D) local tokens; w*: (E_loc, ...) local experts
+        m = jax.lax.axis_index("model")
+        B, S, D = xl.shape
+        T = B * S
+        xf = xl.reshape(T, D)
+        logits = (xf @ router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_ids = jax.lax.top_k(probs, K)
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+        onehot = jax.nn.one_hot(top_ids, E, dtype=jnp.float32)
+        f_e = jnp.mean(jnp.sum(onehot, axis=1), axis=0)
+        p_e = jnp.mean(probs, axis=0)
+        aux = E * jnp.sum(f_e * p_e) / K
+        aux = jax.lax.pmean(aux, dp_axes[0] if len(dp_axes) == 1 else dp_axes)
+
+        C = int(math.ceil(T * K / E * cfg.capacity_factor))
+        C = max(4, -(-C // 4) * 4)
+        oh = onehot.reshape(T * K, E)
+        pos = jnp.sum((jnp.cumsum(oh, axis=0) - oh) * oh, axis=-1).astype(jnp.int32)
+        ids_flat = top_ids.reshape(T * K)
+        w_flat = top_w.reshape(T * K)
+        within = pos < C
+
+        # my experts: ids in [m*E_loc, (m+1)*E_loc)
+        local_id = ids_flat - m * E_loc
+        mine = (local_id >= 0) & (local_id < E_loc) & within
+        dest = jnp.where(mine, local_id * C + pos, E_loc * C)
+        token_of = jnp.repeat(jnp.arange(T), K)
+        buf = jnp.zeros((E_loc * C + 1, D), x.dtype)
+        buf = buf.at[dest].add(xf[token_of] * mine[:, None].astype(x.dtype))
+        expert_in = buf[: E_loc * C].reshape(E_loc, C, D)
+
+        h = _act(jnp.einsum("ecd,edf->ecf", expert_in, w1), cfg.activation)
+        if w3 is not None:
+            h = h * jnp.einsum("ecd,edf->ecf", expert_in, w3)
+        out_slots = jnp.einsum("ecf,efd->ecd", h, w2).reshape(E_loc * C, D)
+        out_slots = jnp.concatenate(
+            [out_slots, jnp.zeros((1, D), out_slots.dtype)])
+
+        gathered = out_slots[dest] * (w_flat * mine).astype(x.dtype)[:, None]
+        partial = jnp.zeros((T, D), x.dtype).at[token_of].add(gathered)
+        out = jax.lax.psum(partial, "model")       # the only cross-model traffic
+        return out.reshape(B, S, D), aux
+
+    bp = P(dp_axes, None, None)
+    w3 = params.get("w3")
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None), P("model", None, None),
+                  P("model", None, None),
+                  P("model", None, None) if w3 is not None else P(None),
+                  bp),
+        out_specs=(bp, P()),
+        check_rep=False)
+    return fn(params["router"], params["w1"], params["w2"], w3, x)

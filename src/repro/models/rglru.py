@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-gated linear recurrent unit:
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Full-sequence form runs as an associative scan (log-depth on TPU);
+decode is the single-step recurrence. The block wraps the RG-LRU with the
+Griffin recurrent-block structure: linear in, causal conv, RG-LRU, GeLU-gated
+output projection.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+RG_C = 8.0
+
+
+def init_rglru(cfg: ArchConfig, key, dtype):
+    D, W = cfg.d_model, cfg.rnn_width
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    s_in = 1.0 / math.sqrt(D)
+    s_w = 1.0 / math.sqrt(W)
+    # Lambda init so that a in [0.9, 0.999] at r=1 (Griffin appendix)
+    u = jax.random.uniform(k6, (W,), minval=0.9 ** 2, maxval=0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * RG_C)))
+    return {
+        "wx": (jax.random.normal(k1, (D, W)) * s_in).astype(dtype),
+        "wgate": (jax.random.normal(k2, (D, W)) * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(k3, (cfg.rnn_conv, W)) *
+                   (1.0 / math.sqrt(cfg.rnn_conv))).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "wr": (jax.random.normal(k4, (W, W)) * s_w).astype(dtype),
+        "wi": (jax.random.normal(k5, (W, W)) * s_w).astype(dtype),
+        "lam": lam.astype(jnp.float32),
+        "wo": (jax.random.normal(k7, (W, D)) * s_w /
+               math.sqrt(2 * cfg.num_layers)).astype(dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        shift = W - 1 - i
+        if shift == 0:
+            out = out + x * w[i]
+        else:
+            out = out + jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :-shift] * w[i]
+    return out + b
+
+
+def _gates(params, xc):
+    r = jax.nn.sigmoid((xc @ params["wr"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xc @ params["wi"]).astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(params["lam"]) * r          # (B,S,W) fp32
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * xc.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1 (seq)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+    a_out, b_out = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return b_out
+
+
+def rglru_forward(params, x, cfg: ArchConfig, use_kernel: bool = False):
+    """Full-sequence recurrent block. x: (B,S,D) -> (B,S,D)."""
+    gate = jax.nn.gelu(x @ params["wgate"])
+    xw = x @ params["wx"]
+    xc = _causal_conv(xw, params["conv_w"], params["conv_b"])
+    a, gated_in = _gates(params, xc)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        h = kops.rglru_scan(a, gated_in)
+    else:
+        h = rglru_scan_ref(a, gated_in)
+    y = h.astype(x.dtype) * gate
+    return y @ params["wo"]
+
+
+def rglru_init_cache(cfg: ArchConfig, batch: int, dtype):
+    W = cfg.rnn_width
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rnn_conv - 1, W), dtype),
+    }
+
+
+def rglru_step(params, x, cache, cfg: ArchConfig):
+    """One-token decode. x: (B,1,D)."""
+    B = x.shape[0]
+    gate = jax.nn.gelu(x[:, 0] @ params["wgate"])
+    xw = x[:, 0] @ params["wx"]
+    hist = jnp.concatenate([cache["conv"], xw[:, None, :]], axis=1)
+    xc = jnp.einsum("bwc,wc->bc", hist, params["conv_w"]) + params["conv_b"]
+    a, gated_in = _gates(params, xc[:, None, :])
+    a, gated_in = a[:, 0], gated_in[:, 0]
+    h = a * cache["h"] + gated_in
+    y = h.astype(x.dtype) * gate
+    return (y @ params["wo"])[:, None, :], {"h": h, "conv": hist[:, 1:]}

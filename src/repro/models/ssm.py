@@ -1,0 +1,194 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Full-sequence form uses the chunked SSD algorithm: quadratic attention-like
+compute inside chunks of length ``ssm_chunk`` plus a linear inter-chunk state
+recurrence — this is the TPU-friendly form (MXU-aligned chunk matmuls).
+Decode is the classic SSM state update (constant memory, no KV cache).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+N_GROUPS = 1  # B/C projection groups (Mamba-2 default for these sizes)
+
+
+def init_ssd(cfg: ArchConfig, key, dtype):
+    D = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_ch = di + 2 * N_GROUPS * N
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s_in = 1.0 / math.sqrt(D)
+    proj_out = 2 * di + 2 * N_GROUPS * N + H          # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(k1, (D, proj_out)) * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_ch)) *
+                   (1.0 / math.sqrt(cfg.ssm_conv))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": (jax.random.uniform(k3, (H,), minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))).astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(k4, (di, D)) *
+                     (1.0 / math.sqrt(di)) / math.sqrt(2 * cfg.num_layers)).astype(dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifted adds. x: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        shift = W - 1 - i
+        if shift == 0:
+            out = out + x * w[i]
+        else:
+            out = out + jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :-shift] * w[i]
+    return out + b
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    g = N_GROUPS
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: di + di + 2 * g * N]
+    dt = zxbcdt[..., di + di + 2 * g * N:]
+    return z, xBC, dt
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD (pure jnp oracle). x: (b,s,h,p); dt: (b,s,h); A: (h,);
+    Bm, Cm: (b,s,g,n). Returns y: (b,s,h,p)."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    L = chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bh = jnp.repeat(Bm.reshape(b, nc, L, g, n), rep, axis=3)       # (b,nc,L,h,n)
+    Ch = jnp.repeat(Cm.reshape(b, nc, L, g, n), rep, axis=3)
+
+    dA = dtc * A                                                    # (b,nc,L,h)
+    cs = jnp.cumsum(dA, axis=2)                                     # inclusive cumsum
+
+    # intra-chunk (attention-like): contribution of position j<=i within chunk
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]              # (b,nc,i,j,h)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    y_diag = jnp.einsum("bclhn,bcshn,bclsh,bcsh,bcshp->bclhp",
+                        Ch, Bh, Lmat, dtc, xc)
+
+    # chunk-final states
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)                   # (b,nc,L,h)
+    states = jnp.einsum("bcshn,bcsh,bcsh,bcshp->bchpn",
+                        Bh, dtc, decay_to_end, xc)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                          # (b,nc,h)
+
+    def step(carry, inp):
+        st_prev = carry
+        dec, st = inp
+        st_new = st_prev * dec[:, :, None, None] + st
+        return st_new, st_prev
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    _, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                   # (b,nc,h,p,n)
+
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       Ch, prev_states, jnp.exp(cs))
+    return (y_diag + y_off).reshape(b, s, h, p)
+
+
+def ssd_forward(params, x, cfg: ArchConfig, use_kernel: bool = False):
+    """Full-sequence Mamba-2 block. x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    di, H, P, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = x @ params["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"], params["conv_b"]))
+    xin = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di: di + N_GROUPS * N].reshape(B, S, N_GROUPS, N)
+    Cm = xBC[..., di + N_GROUPS * N:].reshape(B, S, N_GROUPS, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    # causal right-padding to a chunk multiple (padding never affects the past)
+    pad = (-S) % cfg.ssm_chunk
+    if pad:
+        padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (a.ndim - 2))
+        xin_p, dt_p, Bm_p, Cm_p = map(padf, (xin, dt, Bm, Cm))
+    else:
+        xin_p, dt_p, Bm_p, Cm_p = xin, dt, Bm, Cm
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y = kops.ssd_scan(xin_p, dt_p, A, Bm_p, Cm_p, cfg.ssm_chunk)
+    else:
+        y = ssd_scan_ref(xin_p.astype(jnp.float32), dt_p, A,
+                         Bm_p.astype(jnp.float32), Cm_p.astype(jnp.float32),
+                         cfg.ssm_chunk).astype(x.dtype)
+    if pad:
+        y = y[:, :S]
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * xin
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    # gated RMSNorm
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         ).astype(x.dtype) * params["norm_scale"]
+    return y @ params["out_proj"]
+
+
+def ssd_init_cache(cfg: ArchConfig, batch: int, dtype):
+    di, H, P, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = di + 2 * N_GROUPS * N
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def ssd_step(params, x, cache, cfg: ArchConfig):
+    """One-token decode. x: (B,1,D) -> (out (B,1,D), new cache)."""
+    B = x.shape[0]
+    di, H, P, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = x[:, 0] @ params["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # conv over (cached last W-1 inputs, current)
+    hist = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, params["conv_w"]) + params["conv_b"]
+    xBC_c = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+
+    xin = xBC_c[..., :di].reshape(B, H, P)
+    Bm = xBC_c[..., di: di + N_GROUPS * N].reshape(B, N_GROUPS, N)
+    Cm = xBC_c[..., di + N_GROUPS * N:].reshape(B, N_GROUPS, N)
+    rep = H // N_GROUPS
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)              # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                              # (B,H)
+    st = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bh, xin.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, st).astype(x.dtype)
+    y = y + params["D"].astype(x.dtype)[None, :, None] * xin
+    y = y.reshape(B, di) * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         ).astype(x.dtype) * params["norm_scale"]
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"state": st, "conv": new_conv}

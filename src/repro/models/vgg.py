@@ -1,0 +1,123 @@
+"""The paper's analysis programs — VGG16 [11] and ZF [12] — in pure jnp.
+
+These are the actual per-frame compute the paper's streams run (object
+detection backbones). The examples use them to emulate frame analysis cost;
+the resource-model coefficients in core/workload.py describe their measured
+cloud footprint. Input size is configurable (default 64x64 for CPU-friendly
+examples; 224 reproduces the canonical architectures).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+# layout entries: (out_channels, kernel, stride) or 'M' = 2x2 maxpool
+def _c(ch, k=3, s=1):
+    return (ch, k, s)
+
+VGG16_LAYOUT: Sequence = (_c(64), _c(64), "M", _c(128), _c(128), "M",
+                          _c(256), _c(256), _c(256), "M",
+                          _c(512), _c(512), _c(512), "M",
+                          _c(512), _c(512), _c(512), "M")
+# ZFNet: 7x7/2 and 5x5/2 early convs shrink the spatial extent fast
+ZF_LAYOUT: Sequence = (_c(96, 7, 2), "M", _c(256, 5, 2), "M",
+                       _c(384), _c(384), _c(256), "M")
+
+
+def _conv(x, w, b, stride: int = 1):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def init_convnet(key, layout: Sequence, *, in_channels: int = 3,
+                 num_classes: int = 1000, input_hw: int = 64,
+                 fc_width: int = 512, dtype=jnp.float32) -> dict:
+    params: dict = {"conv": [], "fc": []}
+    c_in = in_channels
+    hw = input_hw
+    keys = iter(jax.random.split(key, len(layout) + 3))
+    for item in layout:
+        if item == "M":
+            hw //= 2
+            continue
+        ch, ksz, stride = item
+        k = next(keys)
+        w = jax.random.normal(k, (ksz, ksz, c_in, ch)) / math.sqrt(ksz * ksz * c_in)
+        params["conv"].append({"w": w.astype(dtype),
+                               "b": jnp.zeros((ch,), dtype),
+                               "stride": stride})
+        hw = -(-hw // stride)
+        c_in = ch
+    flat = hw * hw * c_in
+    for width in (fc_width, fc_width, num_classes):
+        k = next(keys)
+        w = jax.random.normal(k, (flat, width)) / math.sqrt(flat)
+        params["fc"].append({"w": w.astype(dtype),
+                             "b": jnp.zeros((width,), dtype)})
+        flat = width
+    return params
+
+
+def apply_convnet(params: dict, x: jnp.ndarray, layout: Sequence) -> jnp.ndarray:
+    """x: (B, H, W, C) -> logits (B, num_classes)."""
+    ci = 0
+    for item in layout:
+        if item == "M":
+            x = _maxpool(x)
+        else:
+            p = params["conv"][ci]
+            x = jax.nn.relu(_conv(x, p["w"], p["b"], stride=p["stride"]))
+            ci += 1
+    x = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params["fc"]):
+        x = x @ p["w"] + p["b"]
+        if i < len(params["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_vgg16(key, **kw):
+    return init_convnet(key, VGG16_LAYOUT, **kw)
+
+
+def apply_vgg16(params, x):
+    return apply_convnet(params, x, VGG16_LAYOUT)
+
+
+def init_zf(key, **kw):
+    return init_convnet(key, ZF_LAYOUT, **kw)
+
+
+def apply_zf(params, x):
+    return apply_convnet(params, x, ZF_LAYOUT)
+
+
+def flops_per_frame(layout: Sequence, input_hw: int, in_channels: int = 3,
+                    fc_width: int = 512, num_classes: int = 1000) -> int:
+    """Analytic conv+fc FLOPs — VGG16 is ~16x ZF at 224px, matching the
+    relative CPU coefficients in core/workload.py."""
+    total = 0
+    hw, c_in = input_hw, in_channels
+    for item in layout:
+        if item == "M":
+            hw //= 2
+            continue
+        ch, ksz, stride = item
+        hw = -(-hw // stride)
+        total += 2 * ksz * ksz * c_in * ch * hw * hw
+        c_in = ch
+    flat = hw * hw * c_in
+    for width in (fc_width, fc_width, num_classes):
+        total += 2 * flat * width
+        flat = width
+    return total

@@ -1,0 +1,14 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, warmup: int = 100, total: int = 10_000,
+                    min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to min_ratio. Returns a scale in (0,1]."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, step / max(warmup, 1))
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return warm * (min_ratio + (1 - min_ratio) * cos)

@@ -1,0 +1,143 @@
+"""Batched serving engine + camera-stream simulator.
+
+The paper's workload is "analysis program x camera stream at a frame rate".
+The modern analogue served here: each camera frame becomes one fixed-size
+inference request (frame caption / detection readout from a VLM-style
+decoder); a stream at f fps enqueues f requests per second. The engine runs
+static batching: prefill a batch of equal-length prompts, then decode all of
+them in lock-step (fixed-size requests make frame workloads perfectly
+batchable — see DESIGN.md).
+
+The measured tokens/sec feeds core/tpu_catalog.py, which runs the paper's
+packing machinery over TPU slice types instead of EC2 instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+from repro.models.steps import make_jitted_decode, make_jitted_prefill
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: str
+    tokens: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+    stream_id: Optional[str] = None
+    enqueue_t: float = 0.0
+    output: Optional[np.ndarray] = None
+    finish_t: float = 0.0
+
+
+class ServingEngine:
+    """Static-batching engine for equal-length frame requests."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
+                 cache_len: int = 512, opts: Optional[M.ModelOptions] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.opts = opts or M.ModelOptions(remat=False)
+        self.queue: list[Request] = []
+        self._prefill = make_jitted_prefill(cfg, self.opts, cache_len)
+        self._decode = make_jitted_decode(cfg, self.opts)
+        self.stats = {"requests": 0, "tokens_generated": 0, "batches": 0,
+                      "decode_steps": 0, "wall_s": 0.0}
+
+    def submit(self, req: Request) -> None:
+        req.enqueue_t = time.monotonic()
+        self.queue.append(req)
+
+    def _pad_batch(self, reqs: Sequence[Request]) -> jnp.ndarray:
+        L = max(len(r.tokens) for r in reqs)
+        assert all(len(r.tokens) == L for r in reqs), \
+            "static batching requires equal-length frame requests"
+        toks = np.stack([r.tokens for r in reqs])
+        return jnp.asarray(toks, jnp.int32)
+
+    def step(self) -> list[Request]:
+        """Serve one batch from the queue; returns completed requests."""
+        if not self.queue:
+            return []
+        batch_reqs = self.queue[: self.max_batch]
+        self.queue = self.queue[len(batch_reqs):]
+        t0 = time.monotonic()
+
+        tokens = self._pad_batch(batch_reqs)
+        B, L = tokens.shape
+        logits, cache = self._prefill(self.params, {"tokens": tokens})
+        max_new = max(r.max_new_tokens for r in batch_reqs)
+        outs = np.zeros((B, max_new), np.int32)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(max_new):
+            outs[:, i] = np.asarray(tok)
+            logits, cache = self._decode(self.params, cache,
+                                         {"token": tok,
+                                          "pos": jnp.asarray(L + i, jnp.int32)})
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            self.stats["decode_steps"] += 1
+
+        wall = time.monotonic() - t0
+        self.stats["wall_s"] += wall
+        self.stats["batches"] += 1
+        for b, r in enumerate(batch_reqs):
+            r.output = outs[b, : r.max_new_tokens]
+            r.finish_t = time.monotonic()
+            self.stats["requests"] += 1
+            self.stats["tokens_generated"] += r.max_new_tokens
+        return list(batch_reqs)
+
+    def drain(self) -> list[Request]:
+        done: list[Request] = []
+        while self.queue:
+            done.extend(self.step())
+        return done
+
+    def throughput_tokens_per_s(self) -> float:
+        if self.stats["wall_s"] == 0:
+            return 0.0
+        return self.stats["tokens_generated"] / self.stats["wall_s"]
+
+
+class StreamSimulator:
+    """Camera streams enqueueing fixed-size frame requests at a frame rate."""
+
+    def __init__(self, engine: ServingEngine, prompt_len: int = 32,
+                 new_tokens: int = 8, vocab: Optional[int] = None,
+                 seed: int = 0):
+        self.engine = engine
+        self.prompt_len = prompt_len
+        self.new_tokens = new_tokens
+        self.vocab = vocab or engine.cfg.vocab_size
+        self.rng = np.random.default_rng(seed)
+        self.frame_count = 0
+        self._accum: dict[str, float] = {}
+
+    def tick(self, streams_fps: dict[str, float], dt_s: float = 1.0) -> int:
+        """Enqueue dt_s worth of frames for each stream at its fps.
+        Fractional frames accumulate across ticks (a 0.25 fps camera emits
+        one frame every 4 seconds)."""
+        n = 0
+        for sid, fps in streams_fps.items():
+            acc = self._accum.get(sid, 0.0) + fps * dt_s
+            frames = int(acc)
+            self._accum[sid] = acc - frames
+            for _ in range(frames):
+                toks = self.rng.integers(
+                    0, self.vocab, self.prompt_len).astype(np.int32)
+                self.engine.submit(Request(
+                    request_id=f"{sid}-f{self.frame_count}",
+                    tokens=toks, max_new_tokens=self.new_tokens,
+                    stream_id=sid))
+                self.frame_count += 1
+                n += 1
+        return n

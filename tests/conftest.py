@@ -1,0 +1,8 @@
+import os
+
+# Tests must see the real single CPU device (the 512-device override is
+# strictly dryrun.py's; see the brief).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

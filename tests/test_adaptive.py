@@ -1,0 +1,50 @@
+"""Adaptive runtime management [6,14]: rush-hour demand swings."""
+from repro.core import (AdaptiveManager, ResourceManager, Stream,
+                        fig3_catalog)
+from repro.core.workload import PROGRAMS
+
+
+def rush_hour_fps(t: int) -> float:
+    """Demand profile: quiet nights (0.2 fps), rush-hour peaks (6 fps)."""
+    if t % 24 in (8, 9, 17, 18):
+        return 6.0
+    if t % 24 in (7, 10, 16, 19):
+        return 2.0
+    return 0.2
+
+
+def make_streams(fps: float):
+    return [Stream(f"cam{i}", PROGRAMS["ZF"], fps=fps) for i in range(4)]
+
+
+def test_adaptive_tracks_demand():
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="ST3")
+    costs = []
+    for t in range(48):
+        plan = mgr.step(t, make_streams(rush_hour_fps(t)))
+        costs.append(plan.hourly_cost)
+    # cheap at night, more expensive at peak
+    assert min(costs) < max(costs)
+    # static provisioning for the peak would cost max(costs) all day
+    static_cost = max(costs) * 48
+    assert mgr.total_cost() < 0.6 * static_cost, \
+        "adaptive must beat peak-static provisioning by a wide margin"
+
+
+def test_forced_replan_on_spike():
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="ST3")
+    mgr.step(0, make_streams(0.2))
+    mgr.step(1, make_streams(6.0))     # current plan cannot serve 6 fps
+    kinds = [e.action for e in mgr.events]
+    assert kinds[0] == "replan"
+    assert kinds[1] == "forced-replan"
+
+
+def test_hysteresis_avoids_thrash():
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="ST3",
+                          savings_threshold=0.10)
+    mgr.step(0, make_streams(1.0))
+    # tiny demand decrease: savings below threshold -> keep
+    mgr.step(1, make_streams(0.98))
+    assert mgr.events[1].action == "keep"
+    assert mgr.events[1].migrations == 0

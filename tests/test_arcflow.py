@@ -1,0 +1,95 @@
+"""Arc-flow formulation tests, including the paper's sidebar example."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.arcflow import (ArcFlowGraph, IntItem, build_graph, compress,
+                                max_items_per_bin, min_bins_from_patterns,
+                                patterns, quantize)
+
+
+def sidebar_example():
+    """Truck (7,3); boxes A(5,1)x1, B(3,1)x1, C(2,1)x2 — Fig. in sidebar."""
+    items = [IntItem((5, 1), 1, "A"), IntItem((3, 1), 1, "B"),
+             IntItem((2, 1), 2, "C")]
+    return build_graph((7, 3), items)
+
+
+def test_sidebar_graph_patterns():
+    g = sidebar_example()
+    pats = set(patterns(g))
+    # A+C fits (7,2); B+2C fits (7,3); A+B does not (8 > 7)
+    assert (1, 0, 1) in pats
+    assert (0, 1, 2) in pats
+    assert (1, 1, 0) not in pats
+    assert max(sum(p) for p in pats) == 3
+
+
+def test_sidebar_min_bins():
+    g = sidebar_example()
+    # all four boxes: A+C in one truck, B+C in another -> 2 trucks
+    assert min_bins_from_patterns(g) == 2
+
+
+def test_compression_preserves_patterns():
+    g = sidebar_example()
+    gc = compress(g)
+    assert set(patterns(g)) == set(patterns(gc))
+    assert len(gc.nodes) <= len(g.nodes)
+
+
+@given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5),
+                          st.integers(1, 2)), min_size=1, max_size=4),
+       st.tuples(st.integers(4, 9), st.integers(4, 9)))
+@settings(max_examples=60, deadline=None)
+def test_patterns_respect_capacity_and_demand(raw_items, cap):
+    items = [IntItem((w, h), d, f"i{i}")
+             for i, (w, h, d) in enumerate(raw_items)]
+    g = build_graph(cap, items)
+    for pat in patterns(g, limit=2000):
+        used = [0, 0]
+        for count, item in zip(pat, items):
+            assert count <= item.demand
+            used[0] += count * item.vector[0]
+            used[1] += count * item.vector[1]
+        assert used[0] <= cap[0] and used[1] <= cap[1]
+
+
+@given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5),
+                          st.integers(1, 2)), min_size=1, max_size=4),
+       st.tuples(st.integers(5, 9), st.integers(5, 9)))
+@settings(max_examples=40, deadline=None)
+def test_compression_equivalence(raw_items, cap):
+    items = [IntItem((w, h), d, f"i{i}")
+             for i, (w, h, d) in enumerate(raw_items)]
+    g = build_graph(cap, items)
+    gc = compress(g)
+    assert set(patterns(g, limit=5000)) == set(patterns(gc, limit=5000))
+
+
+def test_min_bins_matches_exact_solver():
+    """Single-choice instances: arc-flow covering == BnB bin count."""
+    from repro.core.packing import Choice, Item, Problem
+    from repro.core.solver import solve
+
+    cap = (7, 3)
+    raw = [((5, 1), 1), ((3, 1), 1), ((2, 1), 2), ((4, 2), 2)]
+    items_af = [IntItem(v, d, str(i)) for i, (v, d) in enumerate(raw)]
+    g = build_graph(cap, items_af)
+    af_bins = min_bins_from_patterns(g)
+
+    choices = (Choice("c", "t", "x", (7.0, 3.0), 1.0),)
+    items = []
+    k = 0
+    for (v, d) in raw:
+        for _ in range(d):
+            items.append(Item(f"i{k}", ((float(v[0]), float(v[1])),)))
+            k += 1
+    sol, _ = solve(Problem(choices=choices, items=tuple(items)))
+    assert len(sol.bins) == af_bins
+
+
+def test_quantize_is_conservative():
+    vecs, cap_int = quantize([(1.01, 0.5)], (8.0, 4.0), levels=8)
+    # ceil: 1.01/8*8 -> 2 levels (conservative rounding up)
+    assert vecs[0][0] >= 2
+    assert cap_int == (8, 8)

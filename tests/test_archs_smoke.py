@@ -1,0 +1,170 @@
+"""Per-architecture smoke tests (REDUCED variants, CPU): one train step with
+finite loss + correct shapes; prefill+decode consistency for decoders."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import InputShape, make_batch
+from repro.models import layers
+from repro.models import model as M
+from repro.models.config import get_config, list_archs
+from repro.models.steps import (TrainOptions, decode_step, init_train_state,
+                                prefill_step, train_step)
+
+ARCHS = list_archs()
+KEY = jax.random.PRNGKey(0)
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    expected = {"mamba2-2.7b", "recurrentgemma-9b", "internvl2-1b",
+                "qwen3-moe-30b-a3b", "yi-9b", "nemotron-4-15b",
+                "hubert-xlarge", "moonshot-v1-16b-a3b", "olmo-1b",
+                "grok-1-314b"}
+    assert set(ARCHS) == expected
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_constraints(arch):
+    cfg = get_config(arch, reduced=True)
+    assert cfg.num_layers <= 3
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_sizes(arch):
+    """Full configs match the assignment (spot totals per arch)."""
+    cfg = get_config(arch)
+    expected = {
+        "mamba2-2.7b": (64, 2560, 50280), "recurrentgemma-9b": (38, 4096, 256000),
+        "internvl2-1b": (24, 896, 151655), "qwen3-moe-30b-a3b": (48, 2048, 151936),
+        "yi-9b": (48, 4096, 64000), "nemotron-4-15b": (32, 6144, 256000),
+        "hubert-xlarge": (48, 1280, 504), "moonshot-v1-16b-a3b": (48, 2048, 163840),
+        "olmo-1b": (16, 2048, 50304), "grok-1-314b": (64, 6144, 131072),
+    }[arch]
+    assert (cfg.num_layers, cfg.d_model, cfg.vocab_size) == expected
+
+
+def test_param_counts_plausible():
+    """Analytic parameter totals land near the models' nameplate sizes."""
+    approx = {
+        "mamba2-2.7b": (2.3e9, 3.2e9), "yi-9b": (8e9, 10e9),
+        "olmo-1b": (1.0e9, 1.4e9), "grok-1-314b": (2.6e11, 3.6e11),
+        "qwen3-moe-30b-a3b": (2.6e10, 3.4e10),
+        # assignment specifies 48L x 64e x d_ff 1408 -> ~28B total (the HF
+        # card's 16B uses 27 layers; we implement the assignment exactly)
+        "moonshot-v1-16b-a3b": (2.4e10, 3.2e10),
+        "nemotron-4-15b": (1.3e10, 1.8e10),
+        "recurrentgemma-9b": (8e9, 11e9), "hubert-xlarge": (0.8e9, 1.3e9),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.2e} not in [{lo:.1e},{hi:.1e}]"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    """One forward/train step on CPU: output shapes + no NaNs."""
+    cfg = get_config(arch, reduced=True)
+    opts = M.ModelOptions(remat=False)
+    shape = InputShape("smoke", 64, 2, "train")
+    batch = make_batch(cfg, shape, seed=0)
+    state = init_train_state(cfg, KEY, jnp.float32, TrainOptions())
+    step = jax.jit(functools.partial(train_step, cfg=cfg, opts=opts,
+                                     topts=TrainOptions()))
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params updated and still finite
+    leaf = jax.tree.leaves(new_state["params"])[0]
+    assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_microbatched_train_matches_shapes(arch):
+    cfg = get_config(arch, reduced=True)
+    opts = M.ModelOptions(remat=False)
+    shape = InputShape("smoke", 64, 4, "train")
+    batch = make_batch(cfg, shape, seed=0)
+    topts = TrainOptions(microbatches=2)
+    state = init_train_state(cfg, KEY, jnp.float32, topts)
+    step = jax.jit(functools.partial(train_step, cfg=cfg, opts=opts,
+                                     topts=topts))
+    _, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a, reduced=True).causal])
+def test_prefill_decode_consistency(arch):
+    """Decode from a prefill cache == full forward (capacity drops disabled)."""
+    cfg = dataclasses.replace(get_config(arch, reduced=True),
+                              capacity_factor=8.0)
+    opts = M.ModelOptions(remat=False)
+    params = M.init_params(cfg, KEY, jnp.float32)
+    S = 33
+    batch = make_batch(cfg, InputShape("t", S, 2, "prefill"), seed=3)
+
+    hidden, _ = M.forward_hidden(params, batch, cfg, opts)
+    want = layers.unembed(params["embed"], hidden[:, -1:], cfg)[:, 0]
+
+    if cfg.frontend == "vision":
+        pre = {"tokens": batch["tokens"][:, :-1],
+               "patch_embeds": batch["patch_embeds"]}
+        pos = cfg.num_patches + batch["tokens"].shape[1] - 1
+    else:
+        pre = {"tokens": batch["tokens"][:, :-1]}
+        pos = batch["tokens"].shape[1] - 1
+    last_tok = batch["tokens"][:, -1]
+    _, cache = M.prefill(params, pre, cfg, opts, cache_len=S + 8)
+    got, _ = M.decode_step(params, last_tok, jnp.asarray(pos), cache, cfg, opts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_sliding_window_ring_cache_matches_full():
+    """Dense arch with window_override: ring cache decode == full-cache decode
+    with window masking (the long_500k optimized vs baseline paths)."""
+    cfg = get_config("yi-9b", reduced=True)
+    S, W = 40, 16
+    params = M.init_params(cfg, KEY, jnp.float32)
+    batch = make_batch(cfg, InputShape("t", S, 2, "prefill"), seed=5)
+    pre = {"tokens": batch["tokens"][:, :-1]}
+    last = batch["tokens"][:, -1]
+    pos = jnp.asarray(S - 1)
+
+    o_full = M.ModelOptions(remat=False, window_override=W, ring_cache=False)
+    o_ring = M.ModelOptions(remat=False, window_override=W, ring_cache=True)
+    _, c_full = M.prefill(params, pre, cfg, o_full, cache_len=S + 8)
+    _, c_ring = M.prefill(params, pre, cfg, o_ring, cache_len=S + 8)
+    lf, _ = M.decode_step(params, last, pos, c_full, cfg, o_full)
+    lr, _ = M.decode_step(params, last, pos, c_ring, cfg, o_ring)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lf),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_multi_step_decode_ring():
+    """Several consecutive ring-cache decode steps stay consistent with the
+    full-cache window decode."""
+    cfg = get_config("yi-9b", reduced=True)
+    S, W, steps = 24, 8, 6
+    params = M.init_params(cfg, KEY, jnp.float32)
+    batch = make_batch(cfg, InputShape("t", S, 2, "prefill"), seed=7)
+    pre = {"tokens": batch["tokens"]}
+    o_full = M.ModelOptions(remat=False, window_override=W, ring_cache=False)
+    o_ring = M.ModelOptions(remat=False, window_override=W, ring_cache=True)
+    _, c_full = M.prefill(params, pre, cfg, o_full, cache_len=S + steps)
+    _, c_ring = M.prefill(params, pre, cfg, o_ring, cache_len=S + steps)
+    tok = batch["tokens"][:, -1]
+    for i in range(steps):
+        pos = jnp.asarray(S + i)
+        lf, c_full = M.decode_step(params, tok, pos, c_full, cfg, o_full)
+        lr, c_ring = M.decode_step(params, tok, pos, c_ring, cfg, o_ring)
+        np.testing.assert_allclose(np.asarray(lr), np.asarray(lf),
+                                   atol=1e-3, rtol=1e-3)
+        tok = jnp.argmax(lf, -1).astype(jnp.int32)

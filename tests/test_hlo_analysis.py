@@ -1,0 +1,86 @@
+"""The HLO analyzer must account for scan (while-loop) trip counts — the
+whole point of replacing XLA's cost_analysis, which counts loop bodies once."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _compiled_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_plain_matmul_flops():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 32), jnp.float32)
+    txt = _compiled_text(lambda x, y: x @ y, a, b)
+    got = analyze_hlo(txt)["flops_per_device"]
+    want = 2 * 64 * 32 * 128
+    assert got == pytest.approx(want, rel=0.01)
+
+
+def test_scan_multiplies_flops_by_trips():
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ a, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    txt = _compiled_text(f, jnp.ones((64, 64), jnp.float32))
+    got = analyze_hlo(txt)["flops_per_device"]
+    want = 10 * 2 * 64 * 64 * 64
+    assert got == pytest.approx(want, rel=0.05)
+
+
+def test_nested_scans_compose():
+    a = jnp.zeros((32, 32), jnp.float32)
+
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ a, None
+            ci, _ = jax.lax.scan(inner, c, None, length=4)
+            return ci, None
+        out, _ = jax.lax.scan(outer, x, None, length=3)
+        return out
+
+    txt = _compiled_text(f, jnp.ones((32, 32), jnp.float32))
+    got = analyze_hlo(txt)["flops_per_device"]
+    want = 3 * 4 * 2 * 32 * 32 * 32
+    assert got == pytest.approx(want, rel=0.05)
+
+
+def test_layer_count_now_scales_flops():
+    """Regression for the bug that motivated the analyzer: with scan-over-
+    layers, 2x layers must give ~2x flops."""
+    w = jnp.zeros((2, 64, 64), jnp.float32)    # 2 stacked layers
+    w8 = jnp.zeros((8, 64, 64), jnp.float32)   # 8 stacked layers
+
+    def run(ws, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jnp.ones((64, 64), jnp.float32)
+    f2 = analyze_hlo(_compiled_text(run, w, x))["flops_per_device"]
+    f8 = analyze_hlo(_compiled_text(run, w8, x))["flops_per_device"]
+    assert f8 == pytest.approx(4 * f2, rel=0.05)
+
+
+def test_bytes_grow_with_trips():
+    a = jnp.ones((256, 256), jnp.float32)
+
+    def f(x, n):
+        def body(c, _):
+            return c * 1.5, None
+        out, _ = jax.lax.scan(body, x, None, length=n)
+        return out
+
+    b4 = analyze_hlo(_compiled_text(lambda x: f(x, 4), a))["bytes_per_device"]
+    b16 = analyze_hlo(_compiled_text(lambda x: f(x, 16), a))["bytes_per_device"]
+    assert b16 > 2.5 * b4

@@ -1,0 +1,309 @@
+"""Unit tests for model components."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.models import layers, moe, rglru, ssm
+from repro.models.config import get_config
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(0)
+
+
+# ---------------- norms ----------------
+
+def test_rmsnorm_unit_scale():
+    cfg = get_config("yi-9b", reduced=True)
+    p = layers.init_norm(cfg, KEY, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    y = layers.apply_norm(p, x, cfg)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_nonparam_ln_has_no_params():
+    cfg = get_config("olmo-1b", reduced=True)
+    assert layers.init_norm(cfg, KEY, jnp.float32) == {}
+    x = jnp.asarray(RNG.standard_normal((2, 4, cfg.d_model)), jnp.float32)
+    y = layers.apply_norm({}, x, cfg)
+    np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(np.asarray(y), -1), 1.0, atol=1e-3)
+
+
+# ---------------- rope ----------------
+
+def test_rope_preserves_norm():
+    x = jnp.asarray(RNG.standard_normal((1, 6, 2, 16)), jnp.float32)
+    pos = jnp.arange(6)[None]
+    y = layers.rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               atol=1e-5)
+
+
+def test_rope_relative_phase():
+    """q.k after rope depends only on relative distance."""
+    hd = 32
+    q = jnp.asarray(RNG.standard_normal((1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 1, 1, hd)), jnp.float32)
+    def dot_at(pq, pk):
+        qr = layers.rope(q, jnp.asarray([[pq]]), 1e4)
+        kr = layers.rope(k, jnp.asarray([[pk]]), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), abs=1e-4)
+    assert dot_at(5, 5) == pytest.approx(dot_at(0, 0), abs=1e-4)
+
+
+# ---------------- attention ----------------
+
+def test_gqa_matches_mha_when_repeated():
+    """GQA with kv heads repeated == full MHA on the same tensors."""
+    cfg = get_config("yi-9b", reduced=True)      # 4 heads, kv=2
+    p = layers.init_attention(cfg, KEY, jnp.float32)
+    # build an MHA-equivalent by repeating kv projections
+    G = cfg.num_heads // cfg.num_kv_heads
+    hd = cfg.head_dim
+    wk = p["wk"].reshape(cfg.d_model, cfg.num_kv_heads, hd)
+    wk_full = jnp.repeat(wk, G, axis=1).reshape(cfg.d_model, -1)
+    wv = p["wv"].reshape(cfg.d_model, cfg.num_kv_heads, hd)
+    wv_full = jnp.repeat(wv, G, axis=1).reshape(cfg.d_model, -1)
+    cfg_mha = dataclasses.replace(cfg, num_kv_heads=cfg.num_heads)
+    p_mha = dict(p, wk=wk_full, wv=wv_full)
+    x = jnp.asarray(RNG.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    out_gqa, _ = layers.attention_full(p, x, cfg)
+    out_mha, _ = layers.attention_full(p_mha, x, cfg_mha)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sliding_window_masks_past():
+    """With window w, token t must not see anything before t-w+1: moving the
+    distant past must not change the output."""
+    cfg = get_config("recurrentgemma-9b", reduced=True)
+    w = cfg.window  # 64
+    p = layers.init_attention(cfg, KEY, jnp.float32)
+    S = 96
+    x1 = np.asarray(RNG.standard_normal((1, S, cfg.d_model)), np.float32)
+    x2 = x1.copy()
+    x2[0, :16] += 10.0                      # mutate far past
+    o1, _ = layers.attention_full(p, jnp.asarray(x1), cfg, window=w)
+    o2, _ = layers.attention_full(p, jnp.asarray(x2), cfg, window=w)
+    np.testing.assert_allclose(np.asarray(o1)[0, -1], np.asarray(o2)[0, -1],
+                               atol=1e-4)
+
+
+# ---------------- moe ----------------
+
+def test_moe_balance_loss_bounds():
+    cfg = get_config("qwen3-moe-30b-a3b", reduced=True)
+    p = moe.init_moe(cfg, KEY, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((2, 32, cfg.d_model)), jnp.float32)
+    out, aux = moe.apply_moe(p, x, cfg)
+    assert out.shape == x.shape
+    # perfectly balanced aux == 1.0; can't be below
+    assert float(aux) >= 1.0 - 1e-3
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor → 0+ every token is dropped → output == 0."""
+    cfg = dataclasses.replace(get_config("qwen3-moe-30b-a3b", reduced=True),
+                              capacity_factor=1e-9)
+    p = moe.init_moe(cfg, KEY, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((1, 64, cfg.d_model)), jnp.float32)
+    out, _ = moe.apply_moe(p, x, cfg)
+    # capacity is rounded up to >=4 slots; most tokens must drop
+    assert np.mean(np.abs(np.asarray(out))) < np.mean(np.abs(np.asarray(x)))
+
+
+def test_moe_is_token_independent():
+    """Permuting tokens permutes outputs (router is per-token)."""
+    cfg = dataclasses.replace(get_config("qwen3-moe-30b-a3b", reduced=True),
+                              capacity_factor=8.0)
+    p = moe.init_moe(cfg, KEY, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((1, 16, cfg.d_model)), jnp.float32)
+    out1, _ = moe.apply_moe(p, x, cfg)
+    perm = np.asarray(RNG.permutation(16))
+    out2, _ = moe.apply_moe(p, x[:, perm], cfg)
+    np.testing.assert_allclose(np.asarray(out1)[:, perm], np.asarray(out2),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------- ssd ----------------
+
+@given(st.integers(1, 3), st.sampled_from([16, 32]), st.sampled_from([16, 32]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunk_invariance(b, chunk_a, chunk_b):
+    """SSD output must not depend on the chunk size."""
+    rng = np.random.default_rng(b)
+    s, h, p_, g, n = 64, 2, 16, 1, 16
+    x = jnp.asarray(rng.standard_normal((b, s, h, p_)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, g, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, g, n)), jnp.float32)
+    ya = ssm.ssd_scan_ref(x, dt, A, B, C, chunk_a)
+    yb = ssm.ssd_scan_ref(x, dt, A, B, C, chunk_b)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_ssd_block_causality():
+    cfg = get_config("mamba2-2.7b", reduced=True)
+    p = ssm.init_ssd(cfg, KEY, jnp.float32)
+    S = 64
+    x1 = np.asarray(RNG.standard_normal((1, S, cfg.d_model)), np.float32)
+    x2 = x1.copy()
+    x2[0, S // 2:] += 5.0                    # mutate the future
+    y1 = ssm.ssd_forward(p, jnp.asarray(x1), cfg)
+    y2 = ssm.ssd_forward(p, jnp.asarray(x2), cfg)
+    np.testing.assert_allclose(np.asarray(y1)[0, : S // 2],
+                               np.asarray(y2)[0, : S // 2], atol=1e-4)
+
+
+def test_ssd_decode_matches_forward():
+    """Step-by-step ssd_step == full-sequence ssd_forward."""
+    cfg = get_config("mamba2-2.7b", reduced=True)
+    p = ssm.init_ssd(cfg, KEY, jnp.float32)
+    S = 16
+    x = jnp.asarray(RNG.standard_normal((2, S, cfg.d_model)), jnp.float32)
+    full = np.asarray(ssm.ssd_forward(p, x, cfg))
+    cache = ssm.ssd_init_cache(cfg, 2, jnp.float32)
+    got = []
+    for t in range(S):
+        y, cache = ssm.ssd_step(p, x[:, t:t + 1], cache, cfg)
+        got.append(np.asarray(y)[:, 0])
+    got = np.stack(got, 1)
+    np.testing.assert_allclose(got, full, atol=2e-4, rtol=2e-4)
+
+
+# ---------------- rg-lru ----------------
+
+def test_rglru_decode_matches_forward():
+    cfg = get_config("recurrentgemma-9b", reduced=True)
+    p = rglru.init_rglru(cfg, KEY, jnp.float32)
+    S = 12
+    x = jnp.asarray(RNG.standard_normal((2, S, cfg.d_model)), jnp.float32)
+    full = np.asarray(rglru.rglru_forward(p, x, cfg))
+    cache = rglru.rglru_init_cache(cfg, 2, jnp.float32)
+    got = []
+    for t in range(S):
+        y, cache = rglru.rglru_step(p, x[:, t:t + 1], cache, cfg)
+        got.append(np.asarray(y)[:, 0])
+    got = np.stack(got, 1)
+    np.testing.assert_allclose(got, full, atol=2e-4, rtol=2e-4)
+
+
+def test_rglru_gate_stability():
+    """|a_t| < 1 always (the recurrence cannot blow up)."""
+    cfg = get_config("recurrentgemma-9b", reduced=True)
+    p = rglru.init_rglru(cfg, KEY, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((1, 32, cfg.d_model)) * 10, jnp.float32)
+    xw = x @ p["wx"]
+    xc = rglru._causal_conv(xw, p["conv_w"], p["conv_b"])
+    a, _ = rglru._gates(p, xc)
+    # a = exp(-c*softplus(lam)*r) can round to exactly 1.0 in f32 when the
+    # recurrence gate saturates (r ~ 0); it must never exceed 1.
+    assert float(jnp.max(a)) <= 1.0
+    assert float(jnp.mean(a)) < 1.0
+    assert float(jnp.min(a)) >= 0.0
+
+
+# ---------------- perf-iteration variants ----------------
+
+def test_moe_local_dispatch_matches_global():
+    """Per-sequence dispatch (perf iter 2) == global dispatch when capacity
+    is ample (same routing, same experts, same weights)."""
+    cfg = dataclasses.replace(get_config("qwen3-moe-30b-a3b", reduced=True),
+                              capacity_factor=8.0)
+    p = moe.init_moe(cfg, KEY, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((3, 32, cfg.d_model)), jnp.float32)
+    o_g, a_g = moe.apply_moe(p, x, cfg, local_dispatch=False)
+    o_l, a_l = moe.apply_moe(p, x, cfg, local_dispatch=True)
+    np.testing.assert_allclose(np.asarray(o_g), np.asarray(o_l),
+                               atol=1e-6, rtol=1e-6)
+    assert float(a_g) == pytest.approx(float(a_l), abs=1e-6)
+
+
+def test_blockwise_attention_matches_reference():
+    cfg = get_config("yi-9b", reduced=True)
+    p = layers.init_attention(cfg, KEY, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((2, 128, cfg.d_model)), jnp.float32)
+    o_ref, _ = layers.attention_full(p, x, cfg)
+    for block in (32, 64, 128):
+        o_bw, _ = layers.attention_full(p, x, cfg, blockwise=block)
+        np.testing.assert_allclose(np.asarray(o_bw), np.asarray(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_blockwise_attention_grad_matches():
+    cfg = get_config("yi-9b", reduced=True)
+    p = layers.init_attention(cfg, KEY, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((1, 64, cfg.d_model)), jnp.float32)
+
+    def loss(params, blockwise):
+        o, _ = layers.attention_full(params, x, cfg, blockwise=blockwise)
+        return jnp.sum(o * o)
+
+    g_ref = jax.grad(loss)(p, 0)
+    g_bw = jax.grad(loss)(p, 32)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_bw)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-5)
+
+
+def test_blockwise_attention_window():
+    cfg = get_config("recurrentgemma-9b", reduced=True)
+    p = layers.init_attention(cfg, KEY, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((2, 128, cfg.d_model)), jnp.float32)
+    o_ref, _ = layers.attention_full(p, x, cfg, window=cfg.window)
+    o_bw, _ = layers.attention_full(p, x, cfg, window=cfg.window, blockwise=32)
+    np.testing.assert_allclose(np.asarray(o_bw), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------- paper's analysis programs (VGG16 / ZF) ----------------
+
+def test_vgg_and_zf_forward():
+    from repro.models import vgg
+    key = jax.random.PRNGKey(0)
+    x = jnp.asarray(RNG.standard_normal((2, 64, 64, 3)), jnp.float32)
+    pv = vgg.init_vgg16(key, input_hw=64, num_classes=10)
+    out = vgg.apply_vgg16(pv, x)
+    assert out.shape == (2, 10)
+    assert np.isfinite(np.asarray(out)).all()
+    pz = vgg.init_zf(key, input_hw=64, num_classes=10)
+    out = vgg.apply_zf(pz, x)
+    assert out.shape == (2, 10)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_vgg_zf_relative_cost_matches_workload_model():
+    """VGG16 is several times more expensive than ZF per frame — consistent
+    with the CPU coefficients (16 vs 7.2 cores/fps) in core/workload.py."""
+    from repro.models import vgg
+    fv = vgg.flops_per_frame(vgg.VGG16_LAYOUT, 224)
+    fz = vgg.flops_per_frame(vgg.ZF_LAYOUT, 224)
+    assert 1.5 < fv / fz < 30
+
+
+def test_moe_shard_map_matches_global():
+    """Explicit expert-parallel shard_map MoE (perf iter B5) == the global
+    dispatch when capacity is ample."""
+    from repro.launch.mesh import make_smoke_mesh
+    cfg = dataclasses.replace(get_config("qwen3-moe-30b-a3b", reduced=True),
+                              capacity_factor=8.0)
+    p = moe.init_moe(cfg, KEY, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((2, 32, cfg.d_model)), jnp.float32)
+    mesh = make_smoke_mesh()
+    with mesh:
+        o1, a1 = moe.apply_moe(p, x, cfg)
+        o2, a2 = jax.jit(lambda p_, x_: moe.apply_moe_shard_map(
+            p_, x_, cfg, mesh))(p, x)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-6, rtol=1e-6)
+    assert float(a1) == pytest.approx(float(a2), abs=1e-6)

@@ -1,0 +1,102 @@
+"""Property-based tests for the exact MDMC vector-bin-packing solver."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.heuristics import (cheapest_instance_first,
+                                   first_fit_decreasing, lowest_price_first)
+from repro.core.packing import Choice, Infeasible, Item, Problem, validate
+from repro.core.solver import brute_force, solve
+
+
+@st.composite
+def problems(draw, max_items=6, max_choices=3, ndim=2):
+    n_choices = draw(st.integers(1, max_choices))
+    choices = []
+    for c in range(n_choices):
+        cap = tuple(draw(st.floats(1.0, 10.0)) for _ in range(ndim))
+        price = draw(st.floats(0.1, 5.0))
+        choices.append(Choice(key=f"c{c}", type_name=f"t{c}", location="x",
+                              capacity=cap, price=round(price, 3)))
+    n_items = draw(st.integers(1, max_items))
+    items = []
+    for i in range(n_items):
+        reqs = []
+        for c in range(n_choices):
+            if draw(st.booleans()):
+                req = tuple(round(draw(st.floats(0.0, 6.0)), 3)
+                            for _ in range(ndim))
+                # keep compatible only if it fits an empty bin
+                if all(r <= k for r, k in zip(req, choices[c].capacity)):
+                    reqs.append(req)
+                else:
+                    reqs.append(None)
+            else:
+                reqs.append(None)
+        items.append(Item(key=f"i{i}", requirements=tuple(reqs)))
+    return Problem(choices=tuple(choices), items=tuple(items))
+
+
+def _feasible(problem):
+    return all(it.compatible() for it in problem.items)
+
+
+@given(problems())
+@settings(max_examples=120, deadline=None)
+def test_bnb_matches_brute_force(problem):
+    """The BnB solver is exact: equals exhaustive search on small inputs."""
+    if not _feasible(problem):
+        with pytest.raises(Infeasible):
+            solve(problem)
+        return
+    sol, stats = solve(problem)
+    ref = brute_force(problem)
+    validate(problem, sol)
+    validate(problem, ref)
+    assert stats.optimal
+    assert sol.cost == pytest.approx(ref.cost, abs=1e-6)
+
+
+@given(problems(max_items=10, max_choices=4, ndim=3))
+@settings(max_examples=60, deadline=None)
+def test_solver_invariants(problem):
+    """Coverage, capacity, cost accounting; BnB never worse than greedy."""
+    if not _feasible(problem):
+        return
+    sol, _ = solve(problem)
+    validate(problem, sol)
+    for heur in (first_fit_decreasing, lowest_price_first,
+                 cheapest_instance_first):
+        h = heur(problem)
+        validate(problem, h)
+        assert sol.cost <= h.cost + 1e-9, f"BnB worse than {h.note}"
+
+
+@given(problems(max_items=8))
+@settings(max_examples=60, deadline=None)
+def test_capacity_never_exceeded(problem):
+    """The 90%-cap rule is encoded in the capacities; packing must respect
+    them in every dimension (validate() raises otherwise)."""
+    if not _feasible(problem):
+        return
+    for heur in (first_fit_decreasing, lowest_price_first):
+        sol = heur(problem)
+        for b in sol.bins:
+            used = b.used(problem)
+            cap = problem.choices[b.choice].capacity
+            assert all(u <= c + 1e-6 for u, c in zip(used, cap))
+
+
+def test_solver_scales_to_paper_sizes():
+    """Fig. 6-sized problems (24 streams x 30+ choices) solve within budget."""
+    from repro.core import fig6_catalog, Stream, build_problem
+    from repro.core.workload import PROGRAMS
+    from repro.core import geo
+    cams = list(geo.CAMERAS)
+    streams = [Stream(f"zf{i}", PROGRAMS["ZF"], fps=1.0,
+                      camera=cams[i % len(cams)]) for i in range(24)]
+    problem = build_problem(streams, fig6_catalog(), target_fps=1.0,
+                            rtt_filter=True)
+    sol, stats = solve(problem, time_budget_s=20.0)
+    validate(problem, sol)
+    assert sol.cost > 0

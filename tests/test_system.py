@@ -1,0 +1,77 @@
+"""End-to-end behaviour tests: the full framework flows.
+
+1. manager plans -> engines serve the planned streams -> cost accounted
+2. training driver runs N steps and the loss goes down
+3. dry-run artifacts complete (the 256/512-device sweep runs via
+   python -m repro.launch.dryrun; artifacts land in experiments/)
+"""
+import json
+import os
+
+import numpy as np
+
+from repro.core import (FIG3_SCENARIOS, ResourceManager, fig3_catalog,
+                        make_streams)
+from repro.launch.train import train
+
+
+def test_end_to_end_plan_then_serve():
+    """The paper's loop: resource manager selects instances, streams run."""
+    mgr = ResourceManager(fig3_catalog())
+    streams = make_streams(FIG3_SCENARIOS[1])
+    plan = mgr.plan(streams, "ST3")
+    assert plan.hourly_cost == 0.650
+    util = mgr.utilization(plan)
+    assigned = [s for u in util for s in u["streams"]]
+    assert sorted(assigned) == sorted(s.stream_id for s in streams)
+    for u in util:
+        assert all(f <= 1.0 + 1e-9 for f in u["utilization_of_usable"])
+
+
+def test_training_loss_decreases():
+    """Few hundred steps is the deliverable's bar for the example driver; for
+    CI we check the short-horizon trend on a reduced model (same driver)."""
+    rec = train("olmo-1b", reduced=True, steps=30, batch=8, seq=64,
+                log_every=100)
+    first5 = np.mean(rec["loss_history"][:5])
+    last5 = np.mean(rec["loss_history"][-5:])
+    assert np.isfinite(last5)
+    assert last5 < first5, f"loss did not decrease: {first5} -> {last5}"
+
+
+def test_training_with_grad_accum_matches_direction():
+    rec = train("olmo-1b", reduced=True, steps=10, batch=8, seq=64,
+                microbatches=4, log_every=100)
+    assert np.isfinite(rec["final_loss"])
+
+
+def test_dryrun_artifacts_complete():
+    """All 40 (arch x shape) x 2 meshes accounted for: ok or documented skip."""
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    if not os.path.isdir(d):
+        import pytest
+        pytest.skip("dry-run sweep not yet executed")
+    from repro.data.pipeline import SHAPES
+    from repro.models.config import list_archs
+    missing, failed = [], []
+    for mesh in ("pod1", "pod2"):
+        for arch in list_archs():
+            for shape in SHAPES:
+                p = os.path.join(d, f"{arch}_{shape}_{mesh}.json")
+                if not os.path.exists(p):
+                    missing.append((arch, shape, mesh))
+                    continue
+                rec = json.load(open(p))
+                if "error" in rec:
+                    failed.append((arch, shape, mesh))
+    assert not missing, f"missing dry-runs: {missing}"
+    assert not failed, f"failed dry-runs: {failed}"
+
+
+def test_checkpoint_from_training(tmp_path):
+    path = os.path.join(str(tmp_path), "ck.npz")
+    train("olmo-1b", reduced=True, steps=3, batch=4, seq=64,
+          checkpoint_path=path, log_every=100)
+    assert os.path.exists(path)
+    meta = json.load(open(path + ".meta.json"))
+    assert meta["arch"] == "olmo-1b"
