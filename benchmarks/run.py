@@ -9,9 +9,10 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (adaptive_runtime, fig3_cpu_gpu, fig6_location,
-                            kernel_sweep, roofline, solver_scaling,
-                            speedup_table, table1_catalog, tpu_fleet)
+    from benchmarks import (adaptive_runtime, continuous_vs_static,
+                            fig3_cpu_gpu, fig6_location, kernel_sweep,
+                            roofline, solver_scaling, speedup_table,
+                            table1_catalog, tpu_fleet)
 
     suites = [
         ("fig3 (CPU/GPU selection)", fig3_cpu_gpu.run),
@@ -21,6 +22,8 @@ def main() -> None:
         ("adaptive (rush hour)", adaptive_runtime.run),
         ("solver scaling", solver_scaling.run),
         ("tpu fleet (beyond-paper)", tpu_fleet.run),
+        ("continuous vs static batching (beyond-paper)",
+         continuous_vs_static.run),
         ("pallas kernels (interpret-mode validation)", kernel_sweep.run),
     ]
     print("name,us_per_call,derived")

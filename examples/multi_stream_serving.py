@@ -1,8 +1,10 @@
 """End-to-end driver (the paper's kind: serve many visual-data streams).
 
-The resource manager plans the fleet; a ServingEngine per planned instance
-serves simulated camera streams (each frame = one fixed-size inference
-request against a small LM); the report accounts cost and throughput.
+The resource manager plans the fleet; a ContinuousBatchingEngine per planned
+instance serves simulated camera streams (each frame = one fixed-size
+inference request against a small LM, admitted into a pooled KV-cache slot
+with a 1/fps deadline); the report accounts cost, throughput, and SLO
+attainment.
 
 Run:  PYTHONPATH=src python examples/multi_stream_serving.py
 """
@@ -14,7 +16,7 @@ from repro.core import ResourceManager, Stream, fig3_catalog
 from repro.core.workload import PROGRAMS
 from repro.models import model as M
 from repro.models.config import get_config
-from repro.serving import ServingEngine, StreamSimulator
+from repro.serving import ContinuousBatchingEngine, StreamSimulator
 
 
 def main() -> None:
@@ -28,12 +30,14 @@ def main() -> None:
     print(f"planned fleet: {plan.instance_counts()}  "
           f"(${plan.hourly_cost:.3f}/h, optimal={plan.solution.optimal})")
 
-    # 2) serve: one engine per planned instance; streams assigned per plan
+    # 2) serve: one continuous-batching engine per planned instance;
+    # streams assigned per plan, each frame carrying its 1/fps deadline
     cfg = get_config("olmo-1b", reduced=True)
     params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     total_frames = 0
     for b, util in zip(plan.solution.bins, mgr.utilization(plan)):
-        engine = ServingEngine(cfg, params, max_batch=8, cache_len=96)
+        engine = ContinuousBatchingEngine(cfg, params, max_slots=8,
+                                          cache_len=96)
         sim = StreamSimulator(engine, prompt_len=24, new_tokens=6)
         fps_map = {}
         for sid in util["streams"]:
@@ -43,10 +47,13 @@ def main() -> None:
         for _ in range(8):
             sim.tick(fps_map, dt_s=1.0)
             engine.drain()
-        total_frames += engine.stats["requests"]
+        rep = engine.report()
+        total_frames += rep["requests"]
         print(f"  {util['instance']}: {sorted(fps_map)} -> "
-              f"{engine.stats['requests']} frames, "
-              f"{engine.throughput_tokens_per_s():.1f} tok/s")
+              f"{rep['requests']} frames, {rep['tokens_per_s']:.1f} tok/s, "
+              f"SLO {rep['slo_attainment']:.2f}, "
+              f"p99 {rep['p99_latency_s'] * 1e3:.0f} ms, "
+              f"occupancy {rep['slot_occupancy']:.2f}")
 
     print(f"total frames analyzed: {total_frames}")
     print(f"hourly cost of the planned fleet: ${plan.hourly_cost:.3f}")

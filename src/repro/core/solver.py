@@ -13,8 +13,11 @@ Bounds: dual per-dimension lower bound — for dimension d,
     LB_d = sum_i min_{c in compat(i)} price_c * req_{i,d}(c) / cap_{c,d}
 is a valid lower bound on the remaining cost since each opened instance of
 choice c contributes at most cap_{c,d} of dimension d at price price_c.
-We take max_d LB_d, plus credit for free capacity already paid for in open
-bins (subtracted conservatively).
+We take max_d LB_d minus a credit for free capacity already paid for in the
+open bins (an item landing in open bin b of choice c consumes at most
+price_c * free_{b,d} / cap_{c,d} of its unit bound in dimension d, so
+subtracting the open bins' free-capacity value keeps the bound valid —
+without the credit the bound over-estimates and prunes optimal branches).
 """
 from __future__ import annotations
 
@@ -77,21 +80,13 @@ def solve(problem: Problem,
     unit = _unit_costs(problem)
     nd = problem.ndim
 
-    # suffix lower bound over the ordered items
+    # per-dim suffix sums of the unit lower bounds over the ordered items
     n = len(order)
-    suffix_lb = [0.0] * (n + 1)
-    for pos in range(n - 1, -1, -1):
-        i = order[pos]
-        # max over dims of (per-dim suffix sums) — computed incrementally per dim
-        pass
-    # per-dim suffix sums
     suff = [[0.0] * nd for _ in range(n + 1)]
     for pos in range(n - 1, -1, -1):
         i = order[pos]
         for d in range(nd):
             suff[pos][d] = suff[pos + 1][d] + unit[i][d]
-    for pos in range(n + 1):
-        suffix_lb[pos] = max(suff[pos]) if nd else 0.0
 
     try:
         incumbent = first_fit_decreasing(problem)
@@ -131,7 +126,17 @@ def solve(problem: Problem,
                 best_bins = [Bin(bin_choice[b], list(bin_items[b]))
                              for b in range(len(bin_choice))]
             return
-        if cost + suffix_lb[pos] >= best_cost - 1e-9:
+        # credit[d]: value of free, already-paid capacity in the open bins
+        credit = [0.0] * nd
+        for b in range(len(bin_choice)):
+            ch_b = problem.choices[bin_choice[b]]
+            for d in range(nd):
+                cap = ch_b.capacity[d]
+                if cap > 0:
+                    credit[d] += ch_b.price * (cap - bin_used[b][d]) / cap
+        node_lb = max((suff[pos][d] - credit[d] for d in range(nd)),
+                      default=0.0)
+        if cost + max(node_lb, 0.0) >= best_cost - 1e-9:
             stats.pruned_bound += 1
             return
         key = state_key(pos)
@@ -172,7 +177,12 @@ def solve(problem: Problem,
             ch = problem.choices[c]
             if not fits(req, [0.0] * nd, ch.capacity):
                 continue
-            if cost + ch.price + suffix_lb[pos + 1] >= best_cost - 1e-9:
+            child_lb = 0.0
+            for d in range(nd):
+                cap = ch.capacity[d]
+                extra = ch.price * (cap - req[d]) / cap if cap > 0 else 0.0
+                child_lb = max(child_lb, suff[pos + 1][d] - credit[d] - extra)
+            if cost + ch.price + max(child_lb, 0.0) >= best_cost - 1e-9:
                 continue
             bin_choice.append(c)
             bin_used.append(list(req))

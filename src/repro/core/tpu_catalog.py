@@ -100,6 +100,22 @@ def _load_dryrun(dryrun_dir: str, arch: str, shape: str) -> Optional[dict]:
     return rec if "error" not in rec and "skipped" not in rec else None
 
 
+def streams_from_measured(arch: str,
+                          per_stream_tokens_per_s: dict[str, float],
+                          *, kv_seq: int = 32_768) -> list[LLMStream]:
+    """Packing items from an engine's *measured* per-stream decode rates.
+
+    The paper profiles each (program x stream) empirically before packing;
+    our analogue is the serving engine's measured tokens/sec rather than an
+    assumed fps x tokens-per-frame target. Static lock-step batching
+    understates sustainable throughput (a batch stalls on its slowest
+    request), so fleet plans built from it over-provision; the continuous-
+    batching engine's rates reflect what the hardware actually serves.
+    """
+    return [LLMStream(sid, arch, tokens_per_s=rate, kv_seq=kv_seq)
+            for sid, rate in sorted(per_stream_tokens_per_s.items())]
+
+
 def build_tpu_problem(streams: Sequence[LLMStream], catalog: Catalog,
                       dryrun_dir: Optional[str] = None):
     """Packing problem over TPU slices; reuses repro.core.packing directly."""

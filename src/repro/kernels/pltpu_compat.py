@@ -1,0 +1,12 @@
+"""Version compat for Pallas TPU names shared by the kernel modules.
+
+jax 0.4.x names the compiler-options struct ``TPUCompilerParams``; newer
+releases renamed it to ``CompilerParams``. Accept either so the kernels
+track the installed jax.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or \
+    getattr(pltpu, "CompilerParams")

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
+
 
 def _kernel(a_ref, b_ref, y_ref, h_ref, *, bs: int):
     sj = pl.program_id(2)
@@ -53,7 +55,7 @@ def rglru_scan(a, b, *, block_seq: int = 128, block_w: int = 512,
         out_specs=pl.BlockSpec((1, bs, bw), lambda bi, wj, sj: (bi, sj, wj)),
         out_shape=jax.ShapeDtypeStruct((B, S, W), a.dtype),
         scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="rglru_scan",

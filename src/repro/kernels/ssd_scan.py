@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, L: int):
     j = pl.program_id(1)
@@ -90,7 +92,7 @@ def ssd_scan(x, dt, A, Bm, Cm, chunk: int, *, interpret: bool = True):
         out_specs=pl.BlockSpec((1, L, p), lambda r, j: (r, j, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="ssd_scan",

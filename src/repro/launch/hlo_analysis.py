@@ -84,6 +84,34 @@ _OP_RE = re.compile(
 _ARG_RE = re.compile(r"%?([\w.\-]+)")
 
 
+def _operand_names(arg_str: str) -> list[str]:
+    """Operand names from an instruction's argument list.
+
+    XLA prints operands typed — ``dot(f32[64,128]{1,0} %Arg_0.1, ...)`` — so
+    split on top-level commas (layouts carry commas inside {}) and take each
+    argument's trailing name token.
+    """
+    parts, depth, cur = [], 0, []
+    for ch in arg_str:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    names = []
+    for p in parts:
+        toks = _ARG_RE.findall(p)
+        if toks:
+            names.append(toks[-1])
+    return names
+
+
 _COMMENT_RE = re.compile(r"/\*.*?\*/")
 
 
@@ -141,7 +169,7 @@ def _parse_computations(hlo: str) -> dict[str, list[_Instr]]:
                     break
             arg_str.append(ch)
         arg_str = "".join(arg_str)
-        operands = _ARG_RE.findall(arg_str)
+        operands = _operand_names(arg_str)
         rest = args_part[len(arg_str):]
         calls = _CALLS_RE.findall(rest)
         cond = _COND_RE.findall(rest)

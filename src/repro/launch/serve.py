@@ -1,9 +1,10 @@
 """Serving launcher: allocation-managed multi-stream serving demo.
 
-Plans a fleet with the resource manager (the paper's contribution), then
-serves simulated camera streams on the planned engines and reports cost +
-throughput. CPU-sized by default (reduced configs); the same flow drives
-full configs on real slices.
+Serves simulated camera streams on the continuous-batching engine first (the
+measurement phase — the paper's empirical profiling step), then plans the
+fleet with the resource manager from the *measured* per-stream tokens/sec
+and reports cost, throughput, and SLO attainment. CPU-sized by default
+(reduced configs); the same flow drives full configs on real slices.
 """
 from __future__ import annotations
 
@@ -13,39 +14,84 @@ import json
 import jax
 import jax.numpy as jnp
 
-from repro.core.tpu_catalog import LLMStream, plan_tpu_fleet
+import numpy as np
+
+from repro.core.tpu_catalog import (LLMStream, plan_tpu_fleet,
+                                    streams_from_measured)
 from repro.models import model as M
 from repro.models.config import get_config, list_archs
-from repro.serving import ServingEngine, StreamSimulator
+from repro.serving import (ContinuousBatchingEngine, Request, ServingEngine,
+                           StreamSimulator)
+
+
+def _warmup(eng, prompt_len: int, new_tokens: int) -> None:
+    """Compile the prefill/decode paths outside the measurement window and
+    reset the stats — otherwise one-time jit cost deflates the measured
+    rates the fleet planner consumes. The static engine compiles per batch
+    shape, so warm it at its full max_batch (the continuous engine always
+    prefills B=1 and decodes B=max_slots, so one request covers both)."""
+    n = getattr(eng, "max_batch", 1)
+    toks = np.zeros(prompt_len, np.int32)
+    for i in range(n):
+        eng.submit(Request(f"warmup-{i}", toks.copy(),
+                           max_new_tokens=new_tokens))
+    eng.drain()
+    eng.reset_stats()
 
 
 def serve(arch: str = "olmo-1b", *, n_streams: int = 4, fps: float = 2.0,
           seconds: int = 3, reduced: bool = True,
-          dryrun_dir: str | None = None) -> dict:
-    # 1) plan the fleet with the paper's packing machinery
-    streams = [LLMStream(f"cam-{i}", arch, tokens_per_s=fps * 8)
-               for i in range(n_streams)]
-    plans = {s: plan_tpu_fleet(streams, dryrun_dir=dryrun_dir, strategy=s)
-             for s in ("per-stream", "uniform-big", "packed")}
-
-    # 2) serve the streams (reduced config on CPU)
+          dryrun_dir: str | None = None, engine: str = "continuous") -> dict:
+    # 1) serve the streams (reduced config on CPU) and measure throughput
     cfg = get_config(arch, reduced=reduced)
     params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    engine = ServingEngine(cfg, params, max_batch=8, cache_len=128)
-    sim = StreamSimulator(engine, prompt_len=32, new_tokens=8)
+    if engine == "continuous":
+        eng = ContinuousBatchingEngine(cfg, params, max_slots=8,
+                                       cache_len=128)
+    elif engine == "static":
+        eng = ServingEngine(cfg, params, max_batch=8, cache_len=128)
+    else:
+        raise ValueError(engine)
+    _warmup(eng, prompt_len=32, new_tokens=8)
+    sim = StreamSimulator(eng, prompt_len=32, new_tokens=8)
     done = []
     for t in range(seconds):
         sim.tick({f"cam-{i}": fps for i in range(n_streams)}, dt_s=1.0)
-        done.extend(engine.drain())
+        done.extend(eng.drain())
+
+    # 2) per-stream measured rates feed the packing machinery (the paper's
+    # profile-then-pack loop); streams that served no frames fall back to
+    # their nominal fps x tokens-per-frame target
+    wall = eng.stats["wall_s"]
+    tokens_by_stream: dict[str, int] = {}
+    for r in done:
+        tokens_by_stream[r.stream_id] = (tokens_by_stream.get(r.stream_id, 0)
+                                         + len(r.output))
+    measured = {sid: n / wall for sid, n in tokens_by_stream.items()} \
+        if wall > 0 else {}
+    for i in range(n_streams):
+        measured.setdefault(f"cam-{i}", fps * 8)
+
+    streams = streams_from_measured(arch, measured)
+    plans = {s: plan_tpu_fleet(streams, dryrun_dir=dryrun_dir, strategy=s)
+             for s in ("per-stream", "uniform-big", "packed")}
     packed, per_stream = plans["packed"], plans["per-stream"]
     savings = 1.0 - packed["hourly_cost"] / per_stream["hourly_cost"]
-    return {
+    out = {
         "arch": arch,
+        "engine": engine,
         "frames_served": len(done),
-        "tokens_per_s": round(engine.throughput_tokens_per_s(), 1),
+        "tokens_per_s": round(eng.throughput_tokens_per_s(), 1),
+        "measured_stream_tokens_per_s": {k: round(v, 1)
+                                         for k, v in sorted(measured.items())},
         "fleet_plans": plans,
         "packed_vs_per_stream_savings": round(savings, 3),
     }
+    if isinstance(eng, ContinuousBatchingEngine):
+        rep = eng.report()
+        out["serving_report"] = {k: round(v, 4) if isinstance(v, float) else v
+                                 for k, v in rep.items()}
+    return out
 
 
 def main() -> None:
@@ -54,10 +100,13 @@ def main() -> None:
     ap.add_argument("--streams", type=int, default=4)
     ap.add_argument("--fps", type=float, default=2.0)
     ap.add_argument("--seconds", type=int, default=3)
+    ap.add_argument("--engine", choices=("continuous", "static"),
+                    default="continuous")
     ap.add_argument("--dryrun-dir", default=None)
     args = ap.parse_args()
     out = serve(args.arch, n_streams=args.streams, fps=args.fps,
-                seconds=args.seconds, dryrun_dir=args.dryrun_dir)
+                seconds=args.seconds, dryrun_dir=args.dryrun_dir,
+                engine=args.engine)
     print(json.dumps(out, indent=2))
 
 

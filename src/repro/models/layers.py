@@ -187,28 +187,36 @@ def attention_full(params, x, cfg: ArchConfig, *, window: int = 0,
 def attention_decode(params, x, cache_k, cache_v, pos, cfg: ArchConfig, *,
                      window: int = 0):
     """One-token decode. x: (B, 1, D); cache_[kv]: (B, S_max, K, hd);
-    pos: scalar int32 — current write position. Returns (out, new_k, new_v)."""
+    pos: scalar int32 — current write position, or (B,) int32 for per-row
+    positions (continuous batching: each slot decodes at its own depth).
+    Returns (out, new_k, new_v)."""
     B, _, D = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     S_max = cache_k.shape[1]
     q = _split_heads(x @ params["wq"], H, hd)
     k = _split_heads(x @ params["wk"], K, hd)
     v = _split_heads(x @ params["wv"], K, hd)
-    posb = jnp.full((B, 1), pos)
+    per_row = jnp.ndim(pos) == 1
+    posb = pos[:, None] if per_row else jnp.full((B, 1), pos)
     q = rope(q, posb, cfg.rope_theta)
     k = rope(k, posb, cfg.rope_theta)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
-                                           (0, pos, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
-                                           (0, pos, 0, 0))
+    if per_row:
+        rows = jnp.arange(B)
+        cache_k = cache_k.at[rows, pos].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, pos].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
     G = H // K
     qg = q.reshape(B, 1, K, G, hd)
     scores = jnp.einsum("bskgh,btkh->bkgst", qg, cache_k) / math.sqrt(hd)
     trange = jnp.arange(S_max)
-    mask = trange <= pos
+    mask = trange[None, :] <= posb                        # (B, S_max)
     if window > 0:
-        mask &= trange > pos - window
-    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+        mask &= trange[None, :] > posb - window
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
     out = jnp.einsum("bkgst,btkh->bskgh", w, cache_v).reshape(B, 1, H * hd)
     return out @ params["wo"], cache_k, cache_v
@@ -220,7 +228,8 @@ def attention_decode_ring(params, x, cache_k, cache_v, pos, cfg: ArchConfig):
     Slot = position % L. Because the ring holds exactly the last L positions,
     the only masking needed is "slot already written" (arange(L) <= pos, which
     is all-true once pos >= L). Keys are RoPE'd at their absolute position at
-    write time, so relative phases are correct.
+    write time, so relative phases are correct. ``pos`` may be scalar or (B,)
+    for per-row decode depths (continuous batching).
     """
     B, _, D = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -228,19 +237,25 @@ def attention_decode_ring(params, x, cache_k, cache_v, pos, cfg: ArchConfig):
     q = _split_heads(x @ params["wq"], H, hd)
     k = _split_heads(x @ params["wk"], K, hd)
     v = _split_heads(x @ params["wv"], K, hd)
-    posb = jnp.full((B, 1), pos)
+    per_row = jnp.ndim(pos) == 1
+    posb = pos[:, None] if per_row else jnp.full((B, 1), pos)
     q = rope(q, posb, cfg.rope_theta)
     k = rope(k, posb, cfg.rope_theta)
     slot = jax.lax.rem(pos, L)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
-                                           (0, slot, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
-                                           (0, slot, 0, 0))
+    if per_row:
+        rows = jnp.arange(B)
+        cache_k = cache_k.at[rows, slot].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, slot].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
     G = H // K
     qg = q.reshape(B, 1, K, G, hd)
     scores = jnp.einsum("bskgh,btkh->bkgst", qg, cache_k) / math.sqrt(hd)
-    mask = jnp.arange(L) <= pos
-    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    mask = jnp.arange(L)[None, :] <= posb                 # (B, L)
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
     out = jnp.einsum("bkgst,btkh->bskgh", w, cache_v).reshape(B, 1, H * hd)
     return out @ params["wo"], cache_k, cache_v

@@ -285,6 +285,27 @@ def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype,
     }
 
 
+def insert_cache_slot(cache: Pytree, one: Pytree, slot) -> Pytree:
+    """Write a single-request cache (batch dim of size 1) into row ``slot``
+    of a batched cache of the same cache_len/options.
+
+    Scan caches carry a leading repeat dim — (repeat, batch, ...) leaves —
+    while rem caches are (batch, ...); the batch axis is 1 resp. 0. ``slot``
+    may be a traced int32, so this is jittable (the continuous-batching
+    engine admits a prefilled request into a free slot without re-prefilling
+    the rest of the pool).
+    """
+    def at_axis(axis):
+        def upd(big, small):
+            start = [0] * big.ndim
+            start[axis] = slot
+            return jax.lax.dynamic_update_slice(
+                big, small.astype(big.dtype), tuple(start))
+        return upd
+    return {"scan": jax.tree.map(at_axis(1), cache["scan"], one["scan"]),
+            "rem": jax.tree.map(at_axis(0), cache["rem"], one["rem"])}
+
+
 def _sin_positions(S: int, D: int, dtype):
     pos = jnp.arange(S)[:, None].astype(jnp.float32)
     div = jnp.exp(-math.log(10_000.0) * jnp.arange(0, D, 2) / D)

@@ -102,9 +102,23 @@ def prefill_step(params: Pytree, batch: dict, cfg: ArchConfig,
 
 def decode_step(params: Pytree, cache: Pytree, batch: dict, cfg: ArchConfig,
                 opts: M.ModelOptions):
+    """``batch["pos"]`` may be a scalar (lock-step batch) or a (B,) vector of
+    per-slot positions (continuous batching)."""
     logits, new_cache = M.decode_step(params, batch["token"], batch["pos"],
                                       cache, cfg, opts)
     return logits, new_cache
+
+
+def prefill_into_slot_step(params: Pytree, cache: Pytree, batch: dict, slot,
+                           cfg: ArchConfig, opts: M.ModelOptions,
+                           cache_len: int):
+    """Prefill ONE request (leading batch dim of 1) and insert its KV/state
+    into row ``slot`` of an existing batched cache — the admission primitive
+    of continuous batching: a new request joins a running pool without
+    re-prefilling the other slots. Returns (last-position logits (V,),
+    updated batched cache)."""
+    logits, one = M.prefill(params, batch, cfg, opts, cache_len)
+    return logits[0], M.insert_cache_slot(cache, one, slot)
 
 
 def make_jitted_train_step(cfg: ArchConfig, opts: M.ModelOptions,
@@ -121,4 +135,11 @@ def make_jitted_prefill(cfg: ArchConfig, opts: M.ModelOptions, cache_len: int,
 
 def make_jitted_decode(cfg: ArchConfig, opts: M.ModelOptions, **jit_kwargs):
     f = functools.partial(decode_step, cfg=cfg, opts=opts)
+    return jax.jit(f, **jit_kwargs)
+
+
+def make_jitted_prefill_into_slot(cfg: ArchConfig, opts: M.ModelOptions,
+                                  cache_len: int, **jit_kwargs):
+    f = functools.partial(prefill_into_slot_step, cfg=cfg, opts=opts,
+                          cache_len=cache_len)
     return jax.jit(f, **jit_kwargs)

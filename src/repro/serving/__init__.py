@@ -1,3 +1,5 @@
-from repro.serving.engine import Request, ServingEngine, StreamSimulator
+from repro.serving.engine import (ContinuousBatchingEngine, Request,
+                                  ServingEngine, StreamSimulator)
 
-__all__ = ["Request", "ServingEngine", "StreamSimulator"]
+__all__ = ["ContinuousBatchingEngine", "Request", "ServingEngine",
+           "StreamSimulator"]

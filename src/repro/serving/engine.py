@@ -1,12 +1,20 @@
-"""Batched serving engine + camera-stream simulator.
+"""Serving engines + camera-stream simulator.
 
 The paper's workload is "analysis program x camera stream at a frame rate".
 The modern analogue served here: each camera frame becomes one fixed-size
 inference request (frame caption / detection readout from a VLM-style
-decoder); a stream at f fps enqueues f requests per second. The engine runs
-static batching: prefill a batch of equal-length prompts, then decode all of
-them in lock-step (fixed-size requests make frame workloads perfectly
-batchable — see DESIGN.md).
+decoder); a stream at f fps enqueues f requests per second.
+
+Two engines (see DESIGN.md for the design rationale):
+
+* ``ServingEngine`` — static lock-step batching: prefill a batch of
+  equal-length prompts, then decode all of them together; the batch stalls
+  until its slowest request finishes.
+* ``ContinuousBatchingEngine`` — a fixed pool of preallocated KV-cache
+  slots; new requests are admitted into free slots mid-decode (single-slot
+  prefill-into-cache, no re-prefill of the pool), finished requests free
+  their slot immediately, and the queue is drained earliest-deadline-first
+  using each stream's per-frame latency budget (1/fps).
 
 The measured tokens/sec feeds core/tpu_catalog.py, which runs the paper's
 packing machinery over TPU slice types instead of EC2 instances.
@@ -23,7 +31,8 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ArchConfig
-from repro.models.steps import make_jitted_decode, make_jitted_prefill
+from repro.models.steps import (make_jitted_decode, make_jitted_prefill,
+                                make_jitted_prefill_into_slot)
 
 
 @dataclasses.dataclass
@@ -33,11 +42,35 @@ class Request:
     max_new_tokens: int = 16
     stream_id: Optional[str] = None
     enqueue_t: float = 0.0
+    deadline_s: float = float("inf")   # per-frame latency budget (1/fps)
     output: Optional[np.ndarray] = None
     finish_t: float = 0.0
 
+    @property
+    def deadline_t(self) -> float:
+        return self.enqueue_t + self.deadline_s
 
-class ServingEngine:
+    @property
+    def latency_s(self) -> float:
+        return self.finish_t - self.enqueue_t
+
+
+class _EngineStatsMixin:
+    """Shared stats accounting (both engines keep a ``stats`` dict with a
+    float ``wall_s`` and integer counters including ``tokens_generated``)."""
+
+    def reset_stats(self) -> None:
+        """Zero the counters (e.g. after a jit warmup run)."""
+        self.stats = {k: 0.0 if isinstance(v, float) else 0
+                      for k, v in self.stats.items()}
+
+    def throughput_tokens_per_s(self) -> float:
+        if self.stats["wall_s"] == 0:
+            return 0.0
+        return self.stats["tokens_generated"] / self.stats["wall_s"]
+
+
+class ServingEngine(_EngineStatsMixin):
     """Static-batching engine for equal-length frame requests."""
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
@@ -102,16 +135,177 @@ class ServingEngine:
             done.extend(self.step())
         return done
 
-    def throughput_tokens_per_s(self) -> float:
-        if self.stats["wall_s"] == 0:
-            return 0.0
-        return self.stats["tokens_generated"] / self.stats["wall_s"]
+class ContinuousBatchingEngine(_EngineStatsMixin):
+    """Continuous batching over a fixed pool of preallocated KV-cache slots.
+
+    Each of the ``max_slots`` rows of one batched cache (length ``cache_len``)
+    is a slot. Per step: (1) admit queued requests into free slots in
+    earliest-deadline-first order — each admission prefills that one request
+    and inserts its KV/state into the slot (steps.prefill_into_slot_step),
+    leaving the other slots' caches untouched; (2) run a single batched
+    decode step with per-slot positions; (3) retire any request that reached
+    its ``max_new_tokens``, freeing its slot for the next admission instead
+    of stalling until the whole batch drains.
+
+    Greedy decoding is identical to the static engine's: the prefill's
+    last-position argmax is the first generated token, and each decode step
+    at position prompt_len + i yields token i + 1. (Exception: capacity-
+    limited MoE routing is batch-global — tokens compete for expert capacity
+    with whatever shares the batch — so MoE outputs depend on batch
+    composition under either engine; per-request token equality holds for
+    the batch-independent mixers: dense/windowed attention, SSD, RG-LRU.)
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, max_slots: int = 8,
+                 cache_len: int = 512, opts: Optional[M.ModelOptions] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self.opts = opts or M.ModelOptions(remat=False)
+        self.queue: list[Request] = []
+        self._prefill_slot = make_jitted_prefill_into_slot(
+            cfg, self.opts, cache_len)
+        self._decode = make_jitted_decode(cfg, self.opts)
+        dtype = jax.tree.leaves(params)[0].dtype
+        self.cache = M.init_cache(cfg, max_slots, cache_len, dtype, self.opts)
+        self._slot_req: list[Optional[Request]] = [None] * max_slots
+        self._slot_pos = np.zeros(max_slots, np.int32)   # next write position
+        self._slot_out: list[list[int]] = [[] for _ in range(max_slots)]
+        self._pending = np.zeros(max_slots, np.int32)    # next token to feed
+        self._latencies: list[float] = []
+        self._slo_hits = 0
+        self._occupancy_sum = 0.0
+        self.stats = {"requests": 0, "tokens_generated": 0, "prefills": 0,
+                      "decode_steps": 0, "wall_s": 0.0}
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if len(req.tokens) + req.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"request {req.request_id}: prompt {len(req.tokens)} + "
+                f"{req.max_new_tokens} new tokens exceeds cache_len "
+                f"{self.cache_len}")
+        req.enqueue_t = time.monotonic()
+        self.queue.append(req)
+
+    def active_slots(self) -> list[int]:
+        return [s for s in range(self.max_slots)
+                if self._slot_req[s] is not None]
+
+    # -- engine loop ---------------------------------------------------------
+
+    def _admit(self, req: Request, slot: int) -> None:
+        tokens = jnp.asarray(req.tokens[None, :], jnp.int32)
+        logits, self.cache = self._prefill_slot(
+            self.params, self.cache, {"tokens": tokens},
+            jnp.asarray(slot, jnp.int32))
+        first = int(jnp.argmax(logits, -1))
+        self._slot_req[slot] = req
+        self._slot_out[slot] = [first]
+        self._slot_pos[slot] = len(req.tokens)
+        self._pending[slot] = first
+        self.stats["prefills"] += 1
+        self.stats["tokens_generated"] += 1
+
+    def _retire(self, slot: int) -> Request:
+        req = self._slot_req[slot]
+        req.output = np.asarray(self._slot_out[slot], np.int32)
+        req.finish_t = time.monotonic()
+        self._latencies.append(req.latency_s)
+        if req.latency_s <= req.deadline_s:
+            self._slo_hits += 1
+        self._slot_req[slot] = None
+        self._slot_out[slot] = []
+        self.stats["requests"] += 1
+        return req
+
+    def step(self) -> list[Request]:
+        """One engine iteration: EDF admission into free slots, then one
+        batched decode step for every occupied slot. Returns the requests
+        completed this iteration."""
+        t0 = time.monotonic()
+        done: list[Request] = []
+
+        # 1) admission, earliest deadline first
+        if self.queue:
+            self.queue.sort(key=lambda r: r.deadline_t)
+            for slot in range(self.max_slots):
+                if not self.queue:
+                    break
+                if self._slot_req[slot] is not None:
+                    continue
+                self._admit(self.queue.pop(0), slot)
+                if len(self._slot_out[slot]) >= \
+                        self._slot_req[slot].max_new_tokens:
+                    done.append(self._retire(slot))   # max_new_tokens == 1
+
+        # 2) one decode step for all active slots (free slots ride along and
+        # are overwritten by the next admission's prefill)
+        active = self.active_slots()
+        if active:
+            tok = jnp.asarray(self._pending, jnp.int32)
+            pos = jnp.asarray(self._slot_pos, jnp.int32)
+            logits, self.cache = self._decode(
+                self.params, self.cache, {"token": tok, "pos": pos})
+            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+            self.stats["decode_steps"] += 1
+            self._occupancy_sum += len(active) / self.max_slots
+            for s in active:
+                self._slot_pos[s] += 1
+                self._slot_out[s].append(int(nxt[s]))
+                self._pending[s] = nxt[s]
+                self.stats["tokens_generated"] += 1
+                if len(self._slot_out[s]) >= self._slot_req[s].max_new_tokens:
+                    done.append(self._retire(s))
+
+        self.stats["wall_s"] += time.monotonic() - t0
+        return done
+
+    def drain(self) -> list[Request]:
+        done: list[Request] = []
+        while self.queue or self.active_slots():
+            done.extend(self.step())
+        return done
+
+    # -- reporting -----------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        """Zero the counters and latency records (e.g. after a jit warmup)."""
+        super().reset_stats()
+        self._latencies = []
+        self._slo_hits = 0
+        self._occupancy_sum = 0.0
+
+    def report(self) -> dict:
+        """SLO attainment, latency percentiles, and slot occupancy — the
+        scheduler-facing metrics (tokens/s feeds the packing catalog)."""
+        lat = sorted(self._latencies)
+        n = len(lat)
+
+        def pct(p: float) -> float:
+            if not lat:
+                return 0.0
+            return lat[min(n - 1, max(0, int(np.ceil(p * n)) - 1))]
+
+        steps = self.stats["decode_steps"]
+        return {
+            "requests": self.stats["requests"],
+            "tokens_per_s": self.throughput_tokens_per_s(),
+            "slo_attainment": (self._slo_hits / n) if n else 1.0,
+            "p50_latency_s": pct(0.50),
+            "p99_latency_s": pct(0.99),
+            "slot_occupancy": (self._occupancy_sum / steps) if steps else 0.0,
+        }
 
 
 class StreamSimulator:
-    """Camera streams enqueueing fixed-size frame requests at a frame rate."""
+    """Camera streams enqueueing fixed-size frame requests at a frame rate.
 
-    def __init__(self, engine: ServingEngine, prompt_len: int = 32,
+    Works with either engine (both expose submit/drain/cfg)."""
+
+    def __init__(self, engine, prompt_len: int = 32,
                  new_tokens: int = 8, vocab: Optional[int] = None,
                  seed: int = 0):
         self.engine = engine
@@ -125,19 +319,22 @@ class StreamSimulator:
     def tick(self, streams_fps: dict[str, float], dt_s: float = 1.0) -> int:
         """Enqueue dt_s worth of frames for each stream at its fps.
         Fractional frames accumulate across ticks (a 0.25 fps camera emits
-        one frame every 4 seconds)."""
+        one frame every 4 seconds). Each frame carries a 1/fps latency
+        budget — the stream's frame period — which the deadline-aware
+        engine uses for EDF ordering and SLO accounting."""
         n = 0
         for sid, fps in streams_fps.items():
             acc = self._accum.get(sid, 0.0) + fps * dt_s
             frames = int(acc)
             self._accum[sid] = acc - frames
+            budget = (1.0 / fps) if fps > 0 else float("inf")
             for _ in range(frames):
                 toks = self.rng.integers(
                     0, self.vocab, self.prompt_len).astype(np.int32)
                 self.engine.submit(Request(
                     request_id=f"{sid}-f{self.frame_count}",
                     tokens=toks, max_new_tokens=self.new_tokens,
-                    stream_id=sid))
+                    stream_id=sid, deadline_s=budget))
                 self.frame_count += 1
                 n += 1
         return n

@@ -48,3 +48,67 @@ def test_hysteresis_avoids_thrash():
     mgr.step(1, make_streams(0.98))
     assert mgr.events[1].action == "keep"
     assert mgr.events[1].migrations == 0
+    # kept plan means the current plan object is unchanged
+    assert mgr.current is mgr.step(2, make_streams(0.98))
+
+
+def _mini_plan(assignment: dict[str, int]):
+    """Tiny synthetic Plan: stream key -> choice index (0 or 1)."""
+    from repro.core.packing import Bin, Choice, Item, Problem, Solution
+    from repro.core.strategies import Plan
+
+    choices = (Choice("cA", "tA", "x", (10.0,), 1.0),
+               Choice("cB", "tB", "x", (10.0,), 2.0))
+    items = tuple(Item(k, ((1.0,), (1.0,))) for k in assignment)
+    bins: dict[int, Bin] = {}
+    for i, c in enumerate(assignment.values()):
+        bins.setdefault(c, Bin(choice=c, items=[])).items.append(i)
+    cost = sum(choices[b.choice].price for b in bins.values())
+    sol = Solution(bins=list(bins.values()), cost=cost, note="mini")
+    return Plan(solution=sol,
+                problem=Problem(choices=choices, items=items),
+                strategy="ST3")
+
+
+def test_count_migrations():
+    from repro.core.adaptive import _count_migrations
+
+    old = _mini_plan({"a": 0, "b": 0, "c": 1})
+    assert _count_migrations(old, _mini_plan({"a": 0, "b": 0, "c": 1})) == 0
+    # one stream moves to a different instance
+    assert _count_migrations(old, _mini_plan({"a": 0, "b": 1, "c": 1})) == 1
+    # everything moves
+    assert _count_migrations(old, _mini_plan({"a": 1, "b": 1, "c": 0})) == 3
+    # a brand-new stream counts as a migration (it must be placed)
+    assert _count_migrations(
+        old, _mini_plan({"a": 0, "b": 0, "c": 1, "d": 0})) == 1
+    # a departed stream does not
+    assert _count_migrations(old, _mini_plan({"a": 0, "b": 0})) == 0
+
+
+def test_total_cost_integrates_rush_hour_trace():
+    """total_cost == the per-tick integral of the applied plan's hourly cost
+    over a 48h rush-hour fps trace (1 tick = 1 hour)."""
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="ST3")
+    integral = 0.0
+    for t in range(48):
+        plan = mgr.step(t, make_streams(rush_hour_fps(t)))
+        integral += plan.hourly_cost
+    assert len(mgr.events) == 48
+    assert mgr.total_cost() == sum(e.hourly_cost for e in mgr.events)
+    assert mgr.total_cost() == integral
+    # the trace forces at least one replan in each direction of the swing
+    kinds = {e.action for e in mgr.events}
+    assert "forced-replan" in kinds and "keep" in kinds
+
+
+def test_forced_replan_restores_feasibility():
+    """After a forced replan on infeasible demand growth, the new plan must
+    itself be feasible for the demanded rates."""
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="ST3")
+    mgr.step(0, make_streams(0.2))
+    spike = make_streams(6.0)
+    plan = mgr.step(1, spike)
+    assert mgr.events[1].action == "forced-replan"
+    assert mgr.events[1].migrations > 0
+    assert mgr._plan_feasible_for(plan, spike)

@@ -1,6 +1,17 @@
-"""Arc-flow formulation tests, including the paper's sidebar example."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""Arc-flow formulation tests, including the paper's sidebar example.
+
+``hypothesis`` is optional (see DESIGN.md, Testing): the property tests run
+when it is installed; deterministic seeded sweeps below cover the same
+invariants either way.
+"""
+import numpy as np
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.arcflow import (ArcFlowGraph, IntItem, build_graph, compress,
                                 max_items_per_bin, min_bins_from_patterns,
@@ -37,11 +48,7 @@ def test_compression_preserves_patterns():
     assert len(gc.nodes) <= len(g.nodes)
 
 
-@given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5),
-                          st.integers(1, 2)), min_size=1, max_size=4),
-       st.tuples(st.integers(4, 9), st.integers(4, 9)))
-@settings(max_examples=60, deadline=None)
-def test_patterns_respect_capacity_and_demand(raw_items, cap):
+def _check_patterns_respect_capacity_and_demand(raw_items, cap):
     items = [IntItem((w, h), d, f"i{i}")
              for i, (w, h, d) in enumerate(raw_items)]
     g = build_graph(cap, items)
@@ -54,16 +61,54 @@ def test_patterns_respect_capacity_and_demand(raw_items, cap):
         assert used[0] <= cap[0] and used[1] <= cap[1]
 
 
-@given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5),
-                          st.integers(1, 2)), min_size=1, max_size=4),
-       st.tuples(st.integers(5, 9), st.integers(5, 9)))
-@settings(max_examples=40, deadline=None)
-def test_compression_equivalence(raw_items, cap):
+def _check_compression_equivalence(raw_items, cap):
     items = [IntItem((w, h), d, f"i{i}")
              for i, (w, h, d) in enumerate(raw_items)]
     g = build_graph(cap, items)
     gc = compress(g)
     assert set(patterns(g, limit=5000)) == set(patterns(gc, limit=5000))
+
+
+def _random_instances(n, seed=0):
+    """Deterministic (raw_items, cap) instances mirroring the hypothesis
+    strategy: up to 4 items with vectors in [1,5]^2, demand in [1,2]."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        k = int(rng.integers(1, 5))
+        raw = [(int(rng.integers(1, 6)), int(rng.integers(1, 6)),
+                int(rng.integers(1, 3))) for _ in range(k)]
+        cap = (int(rng.integers(4, 10)), int(rng.integers(4, 10)))
+        out.append((raw, cap))
+    return out
+
+
+def test_patterns_respect_capacity_and_demand_seeded():
+    for raw, cap in _random_instances(40, seed=1):
+        _check_patterns_respect_capacity_and_demand(raw, cap)
+
+
+def test_compression_equivalence_seeded():
+    for raw, cap in _random_instances(25, seed=2):
+        if cap[0] < 5 or cap[1] < 5:
+            continue
+        _check_compression_equivalence(raw, cap)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5),
+                              st.integers(1, 2)), min_size=1, max_size=4),
+           st.tuples(st.integers(4, 9), st.integers(4, 9)))
+    @settings(max_examples=60, deadline=None)
+    def test_patterns_respect_capacity_and_demand(raw_items, cap):
+        _check_patterns_respect_capacity_and_demand(raw_items, cap)
+
+    @given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5),
+                              st.integers(1, 2)), min_size=1, max_size=4),
+           st.tuples(st.integers(5, 9), st.integers(5, 9)))
+    @settings(max_examples=40, deadline=None)
+    def test_compression_equivalence(raw_items, cap):
+        _check_compression_equivalence(raw_items, cap)
 
 
 def test_min_bins_matches_exact_solver():

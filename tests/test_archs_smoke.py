@@ -18,6 +18,16 @@ from repro.models.steps import (TrainOptions, decode_step, init_train_state,
 ARCHS = list_archs()
 KEY = jax.random.PRNGKey(0)
 
+# heaviest reduced configs on CPU (deep block patterns / MoE dispatch);
+# their train-step parametrizations run under -m slow
+HEAVY_ARCHS = {"recurrentgemma-9b", "grok-1-314b", "mamba2-2.7b",
+               "moonshot-v1-16b-a3b", "hubert-xlarge", "qwen3-moe-30b-a3b"}
+
+
+def _arch_params(archs, heavy=HEAVY_ARCHS):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in heavy else a
+            for a in archs]
+
 
 def test_all_ten_archs_registered():
     assert len(ARCHS) == 10
@@ -67,7 +77,8 @@ def test_param_counts_plausible():
         assert lo <= n <= hi, f"{arch}: {n:.2e} not in [{lo:.1e},{hi:.1e}]"
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(
+    ARCHS, heavy=HEAVY_ARCHS | {"internvl2-1b", "nemotron-4-15b"}))
 def test_train_step_smoke(arch):
     """One forward/train step on CPU: output shapes + no NaNs."""
     cfg = get_config(arch, reduced=True)
@@ -85,7 +96,8 @@ def test_train_step_smoke(arch):
     assert np.isfinite(np.asarray(leaf)).all()
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(
+    ARCHS, heavy=set(ARCHS) - {"olmo-1b"}))
 def test_microbatched_train_matches_shapes(arch):
     cfg = get_config(arch, reduced=True)
     opts = M.ModelOptions(remat=False)
@@ -99,8 +111,10 @@ def test_microbatched_train_matches_shapes(arch):
     assert np.isfinite(float(metrics["loss"]))
 
 
-@pytest.mark.parametrize("arch", [a for a in ARCHS
-                                  if get_config(a, reduced=True).causal])
+@pytest.mark.parametrize("arch", _arch_params(
+    [a for a in ARCHS if get_config(a, reduced=True).causal],
+    heavy={"recurrentgemma-9b", "grok-1-314b", "qwen3-moe-30b-a3b",
+           "mamba2-2.7b", "moonshot-v1-16b-a3b"}))
 def test_prefill_decode_consistency(arch):
     """Decode from a prefill cache == full forward (capacity drops disabled)."""
     cfg = dataclasses.replace(get_config(arch, reduced=True),
@@ -148,9 +162,10 @@ def test_sliding_window_ring_cache_matches_full():
                                atol=5e-4, rtol=5e-4)
 
 
+@pytest.mark.slow
 def test_multi_step_decode_ring():
     """Several consecutive ring-cache decode steps stay consistent with the
-    full-cache window decode."""
+    full-cache window decode (single-step variant above runs by default)."""
     cfg = get_config("yi-9b", reduced=True)
     S, W, steps = 24, 8, 6
     params = M.init_params(cfg, KEY, jnp.float32)

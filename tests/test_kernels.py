@@ -22,7 +22,8 @@ def _tol(dtype):
     (1, 256, 4, 64, 1, 256, True, 64),     # MQA sliding window
     (2, 128, 4, 64, 4, 256, True, 0),      # decode-ish: T > S
     (1, 128, 2, 32, 2, 128, False, 0),     # encoder (bidirectional)
-    (1, 512, 8, 128, 2, 512, True, 128),   # bigger window
+    pytest.param(1, 512, 8, 128, 2, 512, True, 128,    # bigger window
+                 marks=pytest.mark.slow),
 ])
 def test_flash_attention(dtype, B, S, H, hd, K, T, causal, window):
     q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), dtype)
@@ -38,7 +39,8 @@ def test_flash_attention(dtype, B, S, H, hd, K, T, causal, window):
     (2, 128, 4, 32, 1, 32, 32),
     (1, 256, 2, 64, 1, 64, 64),
     (1, 64, 4, 16, 2, 16, 16),             # 2 B/C groups
-    (1, 256, 8, 64, 1, 128, 128),          # production-like state size
+    pytest.param(1, 256, 8, 64, 1, 128, 128,   # production-like state size
+                 marks=pytest.mark.slow),
 ])
 def test_ssd_scan_kernel(b, s, h, p, g, n, L):
     x = jnp.asarray(RNG.standard_normal((b, s, h, p)), jnp.float32)
@@ -52,6 +54,7 @@ def test_ssd_scan_kernel(b, s, h, p, g, n, L):
                                atol=3e-5, rtol=3e-5)
 
 
+@pytest.mark.slow
 def test_ssd_chunked_equals_sequential():
     """The chunked SSD algorithm == the O(S) state recurrence definition."""
     b, s, h, p, g, n = 2, 128, 4, 32, 1, 32
@@ -68,10 +71,10 @@ def test_ssd_chunked_equals_sequential():
 
 
 @pytest.mark.parametrize("B,S,W,bs,bw", [
-    (2, 128, 512, 64, 128),
-    (1, 256, 256, 128, 256),
+    pytest.param(2, 128, 512, 64, 128, marks=pytest.mark.slow),
+    pytest.param(1, 256, 256, 128, 256, marks=pytest.mark.slow),
     (3, 64, 128, 64, 128),
-    (1, 512, 1024, 128, 512),
+    pytest.param(1, 512, 1024, 128, 512, marks=pytest.mark.slow),
 ])
 def test_rglru_scan_kernel(B, S, W, bs, bw):
     a = jnp.asarray(RNG.uniform(0.7, 0.999, (B, S, W)), jnp.float32)

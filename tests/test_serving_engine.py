@@ -1,0 +1,149 @@
+"""Continuous-batching engine tests: greedy-token equivalence with the
+static engine, slot reuse within one drain, deadline (EDF) admission, the
+prefill-into-slot model step, and stats sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model as M
+from repro.models.config import get_config
+from repro.models.steps import make_jitted_prefill, make_jitted_prefill_into_slot
+from repro.serving import (ContinuousBatchingEngine, Request, ServingEngine,
+                           StreamSimulator)
+
+CACHE_LEN = 48
+PROMPT_LEN = 16
+
+
+def _setup(arch="olmo-1b", seed=0):
+    cfg = get_config(arch, reduced=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed), jnp.float32)
+    return cfg, params
+
+
+def _mixed_requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32),
+             3 + (i % 4)) for i in range(n)]
+
+
+# batch-independent mixers only: capacity-limited MoE routing depends on
+# batch composition under either engine (see engine.py docstring)
+@pytest.mark.parametrize("arch", [
+    "olmo-1b", "mamba2-2.7b",
+    pytest.param("recurrentgemma-9b", marks=pytest.mark.slow),
+])
+def test_continuous_matches_static_greedy_tokens(arch):
+    cfg, params = _setup(arch)
+    reqs = _mixed_requests(cfg, 6)
+
+    static = ServingEngine(cfg, params, max_batch=3, cache_len=CACHE_LEN)
+    for i, (t, m) in enumerate(reqs):
+        static.submit(Request(f"r{i}", t.copy(), max_new_tokens=m))
+    sdone = {r.request_id: r.output for r in static.drain()}
+
+    cont = ContinuousBatchingEngine(cfg, params, max_slots=3,
+                                    cache_len=CACHE_LEN)
+    for i, (t, m) in enumerate(reqs):
+        cont.submit(Request(f"r{i}", t.copy(), max_new_tokens=m))
+    cdone = {r.request_id: r.output for r in cont.drain()}
+
+    assert set(sdone) == set(cdone)
+    for k in sdone:
+        np.testing.assert_array_equal(sdone[k], cdone[k])
+
+
+def test_finished_slot_reused_within_drain():
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2,
+                                   cache_len=CACHE_LEN)
+    rng = np.random.default_rng(0)
+    toks = lambda: rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+    eng.submit(Request("short", toks(), max_new_tokens=2))
+    eng.submit(Request("long", toks(), max_new_tokens=8))
+    eng.submit(Request("queued", toks(), max_new_tokens=4))
+
+    done1 = eng.step()        # admits short+long; short retires (2 tokens)
+    assert [r.request_id for r in done1] == ["short"]
+    freed = eng._slot_req.index(None)
+    eng.step()                # queued admitted into the freed slot mid-decode
+    assert eng._slot_req[freed] is not None
+    assert eng._slot_req[freed].request_id == "queued"
+    assert eng._slot_req[1 - freed].request_id == "long"
+
+    done = done1 + eng.drain()
+    assert sorted(r.request_id for r in done) == ["long", "queued", "short"]
+    assert eng.stats["prefills"] == 3
+
+
+def test_deadline_aware_admission_is_edf():
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=1,
+                                   cache_len=CACHE_LEN)
+    rng = np.random.default_rng(1)
+    toks = lambda: rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+    eng.submit(Request("lazy", toks(), max_new_tokens=2, deadline_s=60.0))
+    eng.submit(Request("urgent", toks(), max_new_tokens=2, deadline_s=0.01))
+    done = eng.drain()
+    # urgent was submitted later but has the earlier deadline -> served first
+    assert [r.request_id for r in done] == ["urgent", "lazy"]
+
+
+def test_prefill_into_slot_matches_batched_prefill():
+    """Admitting requests one-by-one into a pooled cache produces the same
+    logits and cache as prefilling them together as one batch."""
+    cfg, params = _setup()
+    opts = M.ModelOptions(remat=False)
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, cfg.vocab_size, (2, PROMPT_LEN)).astype(np.int32)
+
+    prefill = make_jitted_prefill(cfg, opts, CACHE_LEN)
+    logits_b, cache_b = prefill(params, {"tokens": jnp.asarray(toks)})
+
+    slot_prefill = make_jitted_prefill_into_slot(cfg, opts, CACHE_LEN)
+    cache = M.init_cache(cfg, 2, CACHE_LEN, jnp.float32, opts)
+    logits0, cache = slot_prefill(params, cache,
+                                  {"tokens": jnp.asarray(toks[:1])}, 0)
+    logits1, cache = slot_prefill(params, cache,
+                                  {"tokens": jnp.asarray(toks[1:])}, 1)
+
+    np.testing.assert_allclose(np.asarray(logits_b[0]), np.asarray(logits0),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(logits_b[1]), np.asarray(logits1),
+                               atol=1e-5, rtol=1e-5)
+    for got, want in zip(jax.tree.leaves(cache), jax.tree.leaves(cache_b)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_stats_monotonic_and_report_sane():
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2,
+                                   cache_len=CACHE_LEN)
+    sim = StreamSimulator(eng, prompt_len=PROMPT_LEN, new_tokens=3)
+    prev = dict(eng.stats)
+    for _ in range(3):
+        sim.tick({"fast": 2.0, "slow": 0.5}, dt_s=1.0)
+        while eng.queue or eng.active_slots():
+            eng.step()
+            for k in ("requests", "tokens_generated", "decode_steps",
+                      "prefills"):
+                assert eng.stats[k] >= prev[k], f"{k} decreased"
+            assert eng.stats["wall_s"] >= prev["wall_s"]
+            prev = dict(eng.stats)
+
+    rep = eng.report()
+    assert rep["requests"] == eng.stats["requests"] > 0
+    assert rep["tokens_per_s"] >= 0.0
+    assert 0.0 <= rep["slo_attainment"] <= 1.0
+    assert 0.0 <= rep["p50_latency_s"] <= rep["p99_latency_s"]
+    assert 0.0 < rep["slot_occupancy"] <= 1.0
+
+
+def test_submit_rejects_oversized_request():
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=1, cache_len=16)
+    toks = np.zeros(12, np.int32)
+    with pytest.raises(ValueError):
+        eng.submit(Request("big", toks, max_new_tokens=8))

@@ -1,7 +1,18 @@
-"""Property-based tests for the exact MDMC vector-bin-packing solver."""
-import hypothesis.strategies as st
+"""Exactness/invariant tests for the MDMC vector-bin-packing solver.
+
+``hypothesis`` is optional (see DESIGN.md, Testing): when missing, seeded
+random instances below exercise the same invariants (solver == brute force
+on tiny instances, solver <= every heuristic, validate() on all solutions).
+"""
+import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.heuristics import (cheapest_instance_first,
                                    first_fit_decreasing, lowest_price_first)
@@ -9,22 +20,21 @@ from repro.core.packing import Choice, Infeasible, Item, Problem, validate
 from repro.core.solver import brute_force, solve
 
 
-@st.composite
-def problems(draw, max_items=6, max_choices=3, ndim=2):
-    n_choices = draw(st.integers(1, max_choices))
+def _random_problem(rng, max_items=6, max_choices=3, ndim=2):
+    n_choices = int(rng.integers(1, max_choices + 1))
     choices = []
     for c in range(n_choices):
-        cap = tuple(draw(st.floats(1.0, 10.0)) for _ in range(ndim))
-        price = draw(st.floats(0.1, 5.0))
+        cap = tuple(float(rng.uniform(1.0, 10.0)) for _ in range(ndim))
         choices.append(Choice(key=f"c{c}", type_name=f"t{c}", location="x",
-                              capacity=cap, price=round(price, 3)))
-    n_items = draw(st.integers(1, max_items))
+                              capacity=cap,
+                              price=round(float(rng.uniform(0.1, 5.0)), 3)))
+    n_items = int(rng.integers(1, max_items + 1))
     items = []
     for i in range(n_items):
         reqs = []
         for c in range(n_choices):
-            if draw(st.booleans()):
-                req = tuple(round(draw(st.floats(0.0, 6.0)), 3)
+            if rng.random() < 0.5:
+                req = tuple(round(float(rng.uniform(0.0, 6.0)), 3)
                             for _ in range(ndim))
                 # keep compatible only if it fits an empty bin
                 if all(r <= k for r, k in zip(req, choices[c].capacity)):
@@ -41,9 +51,7 @@ def _feasible(problem):
     return all(it.compatible() for it in problem.items)
 
 
-@given(problems())
-@settings(max_examples=120, deadline=None)
-def test_bnb_matches_brute_force(problem):
+def _check_bnb_matches_brute_force(problem):
     """The BnB solver is exact: equals exhaustive search on small inputs."""
     if not _feasible(problem):
         with pytest.raises(Infeasible):
@@ -57,9 +65,7 @@ def test_bnb_matches_brute_force(problem):
     assert sol.cost == pytest.approx(ref.cost, abs=1e-6)
 
 
-@given(problems(max_items=10, max_choices=4, ndim=3))
-@settings(max_examples=60, deadline=None)
-def test_solver_invariants(problem):
+def _check_solver_invariants(problem):
     """Coverage, capacity, cost accounting; BnB never worse than greedy."""
     if not _feasible(problem):
         return
@@ -72,9 +78,7 @@ def test_solver_invariants(problem):
         assert sol.cost <= h.cost + 1e-9, f"BnB worse than {h.note}"
 
 
-@given(problems(max_items=8))
-@settings(max_examples=60, deadline=None)
-def test_capacity_never_exceeded(problem):
+def _check_capacity_never_exceeded(problem):
     """The 90%-cap rule is encoded in the capacities; packing must respect
     them in every dimension (validate() raises otherwise)."""
     if not _feasible(problem):
@@ -87,6 +91,70 @@ def test_capacity_never_exceeded(problem):
             assert all(u <= c + 1e-6 for u, c in zip(used, cap))
 
 
+def test_bnb_matches_brute_force_seeded():
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        _check_bnb_matches_brute_force(_random_problem(rng))
+
+
+def test_solver_invariants_seeded():
+    rng = np.random.default_rng(1)
+    for _ in range(25):
+        _check_solver_invariants(
+            _random_problem(rng, max_items=10, max_choices=4, ndim=3))
+
+
+def test_capacity_never_exceeded_seeded():
+    rng = np.random.default_rng(2)
+    for _ in range(25):
+        _check_capacity_never_exceeded(_random_problem(rng, max_items=8))
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def problems(draw, max_items=6, max_choices=3, ndim=2):
+        n_choices = draw(st.integers(1, max_choices))
+        choices = []
+        for c in range(n_choices):
+            cap = tuple(draw(st.floats(1.0, 10.0)) for _ in range(ndim))
+            price = draw(st.floats(0.1, 5.0))
+            choices.append(Choice(key=f"c{c}", type_name=f"t{c}",
+                                  location="x", capacity=cap,
+                                  price=round(price, 3)))
+        n_items = draw(st.integers(1, max_items))
+        items = []
+        for i in range(n_items):
+            reqs = []
+            for c in range(n_choices):
+                if draw(st.booleans()):
+                    req = tuple(round(draw(st.floats(0.0, 6.0)), 3)
+                                for _ in range(ndim))
+                    if all(r <= k for r, k in zip(req, choices[c].capacity)):
+                        reqs.append(req)
+                    else:
+                        reqs.append(None)
+                else:
+                    reqs.append(None)
+            items.append(Item(key=f"i{i}", requirements=tuple(reqs)))
+        return Problem(choices=tuple(choices), items=tuple(items))
+
+    @given(problems())
+    @settings(max_examples=120, deadline=None)
+    def test_bnb_matches_brute_force(problem):
+        _check_bnb_matches_brute_force(problem)
+
+    @given(problems(max_items=10, max_choices=4, ndim=3))
+    @settings(max_examples=60, deadline=None)
+    def test_solver_invariants(problem):
+        _check_solver_invariants(problem)
+
+    @given(problems(max_items=8))
+    @settings(max_examples=60, deadline=None)
+    def test_capacity_never_exceeded(problem):
+        _check_capacity_never_exceeded(problem)
+
+
+@pytest.mark.slow
 def test_solver_scales_to_paper_sizes():
     """Fig. 6-sized problems (24 streams x 30+ choices) solve within budget."""
     from repro.core import fig6_catalog, Stream, build_problem

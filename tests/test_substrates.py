@@ -105,6 +105,7 @@ def test_checkpoint_roundtrip(tmp_path):
 
 # ---------------- serving ----------------
 
+@pytest.mark.slow
 def test_serving_engine_matches_manual_decode():
     """Engine greedy decode == manual prefill+decode loop."""
     cfg = get_config("olmo-1b", reduced=True)

@@ -9,6 +9,7 @@ import json
 import os
 
 import numpy as np
+import pytest
 
 from repro.core import (FIG3_SCENARIOS, ResourceManager, fig3_catalog,
                         make_streams)
@@ -39,6 +40,7 @@ def test_training_loss_decreases():
     assert last5 < first5, f"loss did not decrease: {first5} -> {last5}"
 
 
+@pytest.mark.slow
 def test_training_with_grad_accum_matches_direction():
     rec = train("olmo-1b", reduced=True, steps=10, batch=8, seq=64,
                 microbatches=4, log_every=100)
