@@ -1,36 +1,66 @@
 """Benchmark harness — one module per paper table/figure (+ beyond-paper).
 
 Prints ``name,us_per_call,derived`` CSV per the repository convention, and a
-roofline summary (from the dry-run artifacts) at the end.
+roofline summary (from the dry-run artifacts) at the end. ``--only <suite>``
+runs a single suite (e.g. ``--only fleet_sim`` as a CI smoke job) instead of
+the full sweep; ``--list`` shows the suite keys.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
+
+# Allow `python benchmarks/run.py` from the repo root without PYTHONPATH
+# gymnastics: the harness needs the repo root (for `benchmarks.*`) and src/
+# (for `repro.*`) importable.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+# (key, title, module under benchmarks/). Modules import lazily so that
+# `--only fleet_sim` (the CI smoke job) neither pays for nor breaks on the
+# jax-heavy suites it does not run.
+_SUITES: list[tuple[str, str, str]] = [
+    ("fig3", "fig3 (CPU/GPU selection)", "fig3_cpu_gpu"),
+    ("table1", "table1 (price disparity)", "table1_catalog"),
+    ("fig6", "fig6 (location strategies)", "fig6_location"),
+    ("speedup", "speedup (GPU vs fps)", "speedup_table"),
+    ("adaptive", "adaptive (rush hour)", "adaptive_runtime"),
+    ("solver", "solver scaling", "solver_scaling"),
+    ("tpu_fleet", "tpu fleet (beyond-paper)", "tpu_fleet"),
+    ("continuous", "continuous vs static batching (beyond-paper)",
+     "continuous_vs_static"),
+    ("fleet_sim", "fleet simulator (beyond-paper)", "fleet_sim"),
+    ("kernels", "pallas kernels (interpret-mode validation)",
+     "kernel_sweep"),
+]
 
 
 def main() -> None:
-    from benchmarks import (adaptive_runtime, continuous_vs_static,
-                            fig3_cpu_gpu, fig6_location, kernel_sweep,
-                            roofline, solver_scaling, speedup_table,
-                            table1_catalog, tpu_fleet)
+    import importlib
 
-    suites = [
-        ("fig3 (CPU/GPU selection)", fig3_cpu_gpu.run),
-        ("table1 (price disparity)", table1_catalog.run),
-        ("fig6 (location strategies)", fig6_location.run),
-        ("speedup (GPU vs fps)", speedup_table.run),
-        ("adaptive (rush hour)", adaptive_runtime.run),
-        ("solver scaling", solver_scaling.run),
-        ("tpu fleet (beyond-paper)", tpu_fleet.run),
-        ("continuous vs static batching (beyond-paper)",
-         continuous_vs_static.run),
-        ("pallas kernels (interpret-mode validation)", kernel_sweep.run),
-    ]
+    suites = _SUITES
+    keys = [k for k, _, _ in suites]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=keys, default=None,
+                    help="run a single suite instead of the full sweep")
+    ap.add_argument("--list", action="store_true", help="list suite keys")
+    args = ap.parse_args()
+    if args.list:
+        print("\n".join(keys))
+        return
+    if args.only is not None:
+        suites = [s for s in suites if s[0] == args.only]
+
     print("name,us_per_call,derived")
     mismatches = 0
-    for title, fn in suites:
+    for _, title, mod in suites:
         print(f"# --- {title} ---")
-        for row in fn():
+        run_fn = importlib.import_module(f"benchmarks.{mod}").run
+        for row in run_fn():
             ok = row.get("match_paper")
             tail = "" if ok is None else ("  [MATCHES PAPER]" if ok
                                           else "  [MISMATCH]")
@@ -39,15 +69,17 @@ def main() -> None:
             print(f"{row['name']},{row['us_per_call']:.1f},"
                   f"\"{row['derived']}{tail}\"")
 
-    # roofline summary appendix (not CSV — table form)
-    try:
-        rows = roofline.full_table("pod1")
-        if rows:
-            print("\n# --- roofline (single pod, 256 chips; "
-                  "full table in EXPERIMENTS.md) ---")
-            print(roofline.format_table(rows))
-    except Exception as e:                      # dry-run not executed yet
-        print(f"# roofline skipped: {e}")
+    # roofline summary appendix (not CSV — table form; full sweeps only)
+    if args.only is None:
+        from benchmarks import roofline
+        try:
+            rows = roofline.full_table("pod1")
+            if rows:
+                print("\n# --- roofline (single pod, 256 chips; "
+                      "full table in EXPERIMENTS.md) ---")
+                print(roofline.format_table(rows))
+        except Exception as e:                  # dry-run not executed yet
+            print(f"# roofline skipped: {e}")
 
     if mismatches:
         print(f"# WARNING: {mismatches} cells mismatch the paper")

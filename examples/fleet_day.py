@@ -1,0 +1,56 @@
+"""One simulated day of a worldwide camera fleet under autoscaling.
+
+Replays the follow-the-sun scenario — every camera peaks at its own local
+rush hours, night cameras shift to a cheaper analysis program — against the
+adaptive planner, printing the hour-by-hour cost/SLO trace and the final
+ledger, then a spot-market variant showing preempted streams being replayed
+through replanning.
+
+Run:  PYTHONPATH=src python examples/fleet_day.py
+"""
+from repro.core.manager import ResourceManager
+from repro.sim import (FleetSimulator, ReactivePolicy, SCENARIOS,
+                       StaticPeakPolicy)
+
+
+def simulate(scenario, policy):
+    return FleetSimulator(scenario.demand, policy, scenario.catalog(),
+                          scenario.config).run()
+
+
+def main() -> None:
+    sc = SCENARIOS["follow_the_sun"](n_streams=108)
+    cat = sc.catalog()
+    ledger = simulate(sc, ReactivePolicy(ResourceManager(cat)))
+    static = simulate(sc, StaticPeakPolicy(ResourceManager(cat),
+                                           sc.peak_streams()))
+
+    peak = max(r.cost for r in ledger.records)
+    print("hour  streams  insts   $/h    SLO    mig  (cost bar)")
+    for r in ledger.records:
+        bar = "#" * int(30 * r.cost / peak) if peak > 0 else ""
+        slo = (r.frames_analyzed / r.frames_demanded
+               if r.frames_demanded else 1.0)
+        print(f"{r.t:4.0f}  {r.streams:7d}  {r.instances_live:5d}  "
+              f"${r.cost:6.2f}  {slo:.3f}  {r.migrations:4d}  {bar}")
+
+    print(f"\nadaptive 24h cost: ${ledger.total_cost:.2f}  "
+          f"SLO {ledger.slo_attainment():.4f}")
+    print(f"static-peak 24h:   ${static.total_cost:.2f}  "
+          f"SLO {static.slo_attainment():.4f}")
+    print(f"savings:           "
+          f"{100 * (1 - ledger.total_cost / static.total_cost):.0f}%")
+    print(f"instance-hours by region/type/market:")
+    for k, h in sorted(ledger.instance_hours.items()):
+        print(f"  {'/'.join(k):40s} {h:7.2f} h")
+
+    sp = SCENARIOS["spot_heavy"](n_streams=108)
+    spot = simulate(sp, ReactivePolicy(ResourceManager(sp.catalog())))
+    print(f"\nspot-heavy variant: ${spot.total_cost:.2f}  "
+          f"SLO {spot.slo_attainment():.4f}  "
+          f"{spot.preemptions} preemptions (all replayed; "
+          f"{spot.frames_dropped:.0f} frames dropped, none lost)")
+
+
+if __name__ == "__main__":
+    main()

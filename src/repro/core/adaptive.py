@@ -25,6 +25,12 @@ class AdaptiveEvent:
     migrations: int
 
 
+# A replan trigger decides whether a *still-feasible* plan should even be
+# re-evaluated this tick (computing a candidate plan costs a solver call).
+# Signature: (t, streams, current_plan) -> bool. None = always evaluate.
+ReplanTrigger = Callable[[int, Sequence[Stream], Plan], bool]
+
+
 @dataclasses.dataclass
 class AdaptiveManager:
     """Replans when demand drifts.
@@ -32,23 +38,41 @@ class AdaptiveManager:
     ``savings_threshold``: fraction of current cost a replan must save to be
     worth the migration disruption (hysteresis). A plan that can no longer
     serve the demanded rates forces a replan regardless.
+
+    ``replan_trigger`` makes the control loop pluggable: when the current
+    plan is still feasible, the trigger decides whether to spend a solver
+    call evaluating a cheaper candidate this tick (scheduled policies replan
+    only at chosen hours; the default always evaluates). Infeasibility — or
+    ``step(force=True)``, used by the fleet simulator to replay streams off
+    preempted instances — bypasses the trigger.
     """
 
     manager: ResourceManager
     strategy: str = "ST3"
     savings_threshold: float = 0.10
     target_fps: Optional[float] = None
+    replan_trigger: Optional[ReplanTrigger] = None
 
     current: Optional[Plan] = None
     events: list = dataclasses.field(default_factory=list)
+
+    def history(self) -> tuple[AdaptiveEvent, ...]:
+        """The decision trace so far (immutable view for ledgers/reports)."""
+        return tuple(self.events)
 
     def _plan_feasible_for(self, plan: Plan, streams: Sequence[Stream]) -> bool:
         """Can the already-rented instances serve the new demands in place?
 
         Each stream stays on its assigned instance; we recompute its
-        requirement at the new fps and check capacities.
+        requirement at the new fps and check capacities. A stream the plan
+        has never placed (fleet churn: a camera that just came online) makes
+        the plan infeasible — something must host it.
         """
         by_key = {s.stream_id: s for s in streams}
+        placed = {plan.problem.items[i].key
+                  for b in plan.solution.bins for i in b.items}
+        if any(s.stream_id not in placed for s in streams):
+            return False
         for b in plan.solution.bins:
             ch = plan.problem.choices[b.choice]
             used = [0.0] * plan.problem.ndim
@@ -66,15 +90,25 @@ class AdaptiveManager:
                 used = [u + r for u, r in zip(used, req)]
         return True
 
-    def step(self, t: int, streams: Sequence[Stream]) -> Plan:
-        """One control-loop tick with the current demanded streams."""
+    def step(self, t: int, streams: Sequence[Stream], *,
+             force: bool = False) -> Plan:
+        """One control-loop tick with the current demanded streams.
+
+        ``force=True`` treats the current plan as infeasible regardless of
+        capacity (e.g. an instance it relies on was spot-preempted).
+        """
         if self.current is None:
             self.current = self.manager.plan(streams, self.strategy, self.target_fps)
             self.events.append(AdaptiveEvent(t, "replan", self.current.hourly_cost,
                                              migrations=len(streams)))
             return self.current
 
-        feasible = self._plan_feasible_for(self.current, streams)
+        feasible = (not force) and self._plan_feasible_for(self.current, streams)
+        if feasible and self.replan_trigger is not None \
+                and not self.replan_trigger(t, streams, self.current):
+            self.events.append(AdaptiveEvent(t, "keep",
+                                             self.current.hourly_cost, 0))
+            return self.current
         candidate = self.manager.plan(streams, self.strategy, self.target_fps)
         if not feasible:
             migrations = _count_migrations(self.current, candidate)

@@ -85,3 +85,29 @@ def feasible_regions(camera: str, fps: float, regions) -> list[str]:
 
 def nearest_region(camera: str, regions) -> str:
     return min(regions, key=lambda r: rtt_ms(camera, r))
+
+
+# ---------------------------------------------------------------------------
+# Local (solar) time — the fleet simulator's diurnal demand curves peak at a
+# camera's *local* rush hours, so a worldwide fleet ramps region by region as
+# the sun moves ("follow the sun").
+# ---------------------------------------------------------------------------
+
+def utc_offset_hours(place: Place | str) -> float:
+    """Solar-time UTC offset from longitude (15 degrees of longitude = 1 h).
+
+    A mean-solar-time approximation of the timezone: it ignores political
+    timezone boundaries and DST, which is exactly what a demand model keyed
+    to daylight/rush-hour behaviour wants.
+    """
+    if isinstance(place, str):
+        place = CAMERAS.get(place) or DATACENTERS[place]
+    return place.lon / 15.0
+
+
+def local_hour(utc_hour: float, place: Place | str) -> float:
+    """Local solar hour-of-day in [0, 24) for a UTC simulation time in hours.
+
+    ``place`` is a camera id, a datacenter region id, or a ``Place``.
+    """
+    return (utc_hour + utc_offset_hours(place)) % 24.0

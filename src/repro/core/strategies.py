@@ -204,7 +204,26 @@ def gcl(streams: Sequence[Stream], catalog: Catalog, target_fps: float) -> Plan:
     return Plan(sol, problem, "GCL")
 
 
+# ----------------------------------------------------------------------
+# Fleet-scale greedy (BEYOND-PAPER)
+# ----------------------------------------------------------------------
+
+def ffd_greedy(streams: Sequence[Stream], catalog: Catalog) -> Plan:
+    """FFD: first-fit-decreasing over the full (type × location) choice set,
+    at each stream's own frame rate. Linear-time planning for the fleet
+    simulator, where the control loop replans hundreds of streams every
+    simulated hour and an exact solve per tick is unaffordable. Streams with
+    cameras are RTT-filtered to their Fig.-4 feasible regions.
+    """
+    rtt = any(s.camera is not None for s in streams)
+    problem = build_problem(streams, catalog, rtt_filter=rtt)
+    sol = first_fit_decreasing(problem)
+    validate(problem, sol)
+    return Plan(sol, problem, "FFD")
+
+
 STRATEGIES: dict[str, Callable] = {
     "ST1": st1_cpu_only, "ST2": st2_gpu_only, "ST3": st3_multiple_choice,
     "NL": nearest_location, "ARMVAC": armvac, "ARMVAC+": armvac_plus, "GCL": gcl,
+    "FFD": ffd_greedy,
 }

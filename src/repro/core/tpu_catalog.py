@@ -116,6 +116,16 @@ def streams_from_measured(arch: str,
             for sid, rate in sorted(per_stream_tokens_per_s.items())]
 
 
+def streams_from_engine(arch: str, engine, *,
+                        kv_seq: int = 32_768) -> list[LLMStream]:
+    """Packing items straight from a serving engine's ``measured_rates()``
+    export — the one-call version of the profile-then-pack loop. The engine
+    must have served (and been timed on) some requests first; an engine with
+    no wall time yields no items.
+    """
+    return streams_from_measured(arch, engine.measured_rates(), kv_seq=kv_seq)
+
+
 def build_tpu_problem(streams: Sequence[LLMStream], catalog: Catalog,
                       dryrun_dir: Optional[str] = None):
     """Packing problem over TPU slices; reuses repro.core.packing directly."""

@@ -62,13 +62,7 @@ def serve(arch: str = "olmo-1b", *, n_streams: int = 4, fps: float = 2.0,
     # 2) per-stream measured rates feed the packing machinery (the paper's
     # profile-then-pack loop); streams that served no frames fall back to
     # their nominal fps x tokens-per-frame target
-    wall = eng.stats["wall_s"]
-    tokens_by_stream: dict[str, int] = {}
-    for r in done:
-        tokens_by_stream[r.stream_id] = (tokens_by_stream.get(r.stream_id, 0)
-                                         + len(r.output))
-    measured = {sid: n / wall for sid, n in tokens_by_stream.items()} \
-        if wall > 0 else {}
+    measured = eng.measured_rates()
     for i in range(n_streams):
         measured.setdefault(f"cam-{i}", fps * 8)
 

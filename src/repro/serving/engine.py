@@ -57,17 +57,38 @@ class Request:
 
 class _EngineStatsMixin:
     """Shared stats accounting (both engines keep a ``stats`` dict with a
-    float ``wall_s`` and integer counters including ``tokens_generated``)."""
+    float ``wall_s`` and integer counters including ``tokens_generated``,
+    plus a per-stream token tally behind ``measured_rates``)."""
 
     def reset_stats(self) -> None:
         """Zero the counters (e.g. after a jit warmup run)."""
         self.stats = {k: 0.0 if isinstance(v, float) else 0
                       for k, v in self.stats.items()}
+        self._stream_tokens: dict[str, int] = {}
 
     def throughput_tokens_per_s(self) -> float:
         if self.stats["wall_s"] == 0:
             return 0.0
         return self.stats["tokens_generated"] / self.stats["wall_s"]
+
+    def _count_stream_token(self, req: Request, n: int = 1) -> None:
+        key = req.stream_id or req.request_id
+        self._stream_tokens[key] = self._stream_tokens.get(key, 0) + n
+
+    def measured_rates(self) -> dict[str, float]:
+        """Measured tokens/sec per stream over the engine's wall time.
+
+        This is the profiling export the paper's manager consumes: feed it to
+        ``core.tpu_catalog.streams_from_measured`` (or ``streams_from_engine``)
+        to build packing items from observed — not nominal — throughput, and
+        to the fleet simulator's ``ServiceCalibration`` to bound how many
+        frames a simulated instance can actually analyze.
+        """
+        wall = self.stats["wall_s"]
+        if wall <= 0:
+            return {}
+        return {sid: n / wall
+                for sid, n in sorted(self._stream_tokens.items())}
 
 
 class ServingEngine(_EngineStatsMixin):
@@ -83,6 +104,7 @@ class ServingEngine(_EngineStatsMixin):
         self.queue: list[Request] = []
         self._prefill = make_jitted_prefill(cfg, self.opts, cache_len)
         self._decode = make_jitted_decode(cfg, self.opts)
+        self._stream_tokens: dict[str, int] = {}
         self.stats = {"requests": 0, "tokens_generated": 0, "batches": 0,
                       "decode_steps": 0, "wall_s": 0.0}
 
@@ -127,6 +149,7 @@ class ServingEngine(_EngineStatsMixin):
             r.finish_t = time.monotonic()
             self.stats["requests"] += 1
             self.stats["tokens_generated"] += r.max_new_tokens
+            self._count_stream_token(r, r.max_new_tokens)
         return list(batch_reqs)
 
     def drain(self) -> list[Request]:
@@ -176,6 +199,7 @@ class ContinuousBatchingEngine(_EngineStatsMixin):
         self._latencies: list[float] = []
         self._slo_hits = 0
         self._occupancy_sum = 0.0
+        self._stream_tokens: dict[str, int] = {}
         self.stats = {"requests": 0, "tokens_generated": 0, "prefills": 0,
                       "decode_steps": 0, "wall_s": 0.0}
 
@@ -208,6 +232,7 @@ class ContinuousBatchingEngine(_EngineStatsMixin):
         self._pending[slot] = first
         self.stats["prefills"] += 1
         self.stats["tokens_generated"] += 1
+        self._count_stream_token(req)
 
     def _retire(self, slot: int) -> Request:
         req = self._slot_req[slot]
@@ -257,6 +282,7 @@ class ContinuousBatchingEngine(_EngineStatsMixin):
                 self._slot_out[s].append(int(nxt[s]))
                 self._pending[s] = nxt[s]
                 self.stats["tokens_generated"] += 1
+                self._count_stream_token(self._slot_req[s])
                 if len(self._slot_out[s]) >= self._slot_req[s].max_new_tokens:
                     done.append(self._retire(s))
 
@@ -280,13 +306,18 @@ class ContinuousBatchingEngine(_EngineStatsMixin):
 
     def report(self) -> dict:
         """SLO attainment, latency percentiles, and slot occupancy — the
-        scheduler-facing metrics (tokens/s feeds the packing catalog)."""
+        scheduler-facing metrics (tokens/s feeds the packing catalog).
+
+        With no completed requests yet the latency fields are ``None`` (there
+        is no percentile of an empty sample) and the counters are zero — the
+        report never raises.
+        """
         lat = sorted(self._latencies)
         n = len(lat)
 
-        def pct(p: float) -> float:
+        def pct(p: float) -> Optional[float]:
             if not lat:
-                return 0.0
+                return None
             return lat[min(n - 1, max(0, int(np.ceil(p * n)) - 1))]
 
         steps = self.stats["decode_steps"]

@@ -1,0 +1,27 @@
+"""Trace-driven fleet simulator (BEYOND-PAPER).
+
+Drives the paper's planning/adaptive machinery end-to-end over simulated
+days: diurnal demand per camera region (``demand``), a discrete-event loop
+with instance boot delays, spot-price walks and preemptions (``events`` +
+``cluster``), autoscaling policies over ``AdaptiveManager`` (``autoscaler``),
+per-tick cost/SLO accounting calibrated from serving measurements
+(``ledger``), and a scenario library (``scenarios``). See DESIGN.md.
+"""
+from repro.sim.autoscaler import (PredictiveEWMAPolicy, ReactivePolicy,
+                                  ScheduledPolicy, StaticPeakPolicy)
+from repro.sim.cluster import Cluster, SimInstance, SpotMarket
+from repro.sim.demand import (CameraSpec, DiurnalFleet, FlashCrowd, MixShift,
+                              PoissonChurn, peak_streams, rush_hour_fps)
+from repro.sim.events import Event, EventQueue
+from repro.sim.fleet import FleetSimulator, SimConfig
+from repro.sim.ledger import Ledger, ServiceCalibration, TickRecord
+from repro.sim.scenarios import SCENARIOS, Scenario
+
+__all__ = [
+    "CameraSpec", "Cluster", "DiurnalFleet", "Event", "EventQueue",
+    "FlashCrowd", "FleetSimulator", "Ledger", "MixShift", "PoissonChurn",
+    "PredictiveEWMAPolicy", "ReactivePolicy", "SCENARIOS", "Scenario",
+    "ScheduledPolicy", "ServiceCalibration", "SimConfig", "SimInstance",
+    "SpotMarket", "StaticPeakPolicy", "TickRecord", "peak_streams",
+    "rush_hour_fps",
+]

@@ -1,0 +1,123 @@
+"""Autoscaling policies over the paper's planning machinery.
+
+Each policy answers one question per tick: *what should the fleet plan be
+for the demand we see right now?* All of them delegate the actual packing to
+:class:`~repro.core.manager.ResourceManager` (via
+:class:`~repro.core.adaptive.AdaptiveManager` for the adaptive ones, whose
+``replan_trigger`` hook and ``force`` flag this module exercises):
+
+* ``StaticPeakPolicy`` — the baseline: plan once for the scanned peak
+  demand, never touch it again. Maximum SLO, maximum cost.
+* ``ReactivePolicy`` — replan when the current plan can't serve demand, or
+  when a replan saves more than the hysteresis threshold.
+* ``ScheduledPolicy`` — reactive, but voluntary (cost-saving) replans are
+  only *considered* every ``every_h`` hours; infeasibility still forces.
+* ``PredictiveEWMAPolicy`` — plans for an EWMA-extrapolated forecast of
+  each stream's rate, so capacity boots *before* the ramp arrives instead
+  of after it (trading a little cost for boot-window SLO).
+
+A spot preemption reaches a policy as ``decide(..., preempted=True)``; the
+adaptive policies force a replan, which replays the orphaned streams onto
+live capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.adaptive import AdaptiveManager
+from repro.core.manager import ResourceManager
+from repro.core.strategies import Plan
+from repro.core.workload import Stream
+
+
+class StaticPeakPolicy:
+    """Provision the scanned peak once; ignore demand thereafter."""
+
+    def __init__(self, manager: ResourceManager, peak: Sequence[Stream],
+                 strategy: str = "FFD") -> None:
+        self.name = "static-peak"
+        self._manager = manager
+        self._peak = list(peak)
+        self._strategy = strategy
+        self._plan: Optional[Plan] = None
+
+    def decide(self, t: float, streams: Sequence[Stream], *,
+               preempted: bool = False) -> Plan:
+        if self._plan is None:
+            self._plan = self._manager.plan(self._peak, self._strategy)
+        return self._plan
+
+
+class ReactivePolicy:
+    """Adaptive replanning with hysteresis (the paper's runtime manager)."""
+
+    def __init__(self, manager: ResourceManager, strategy: str = "FFD",
+                 savings_threshold: float = 0.10, replan_trigger=None,
+                 name: str = "reactive") -> None:
+        self.name = name
+        self.adaptive = AdaptiveManager(manager, strategy=strategy,
+                                        savings_threshold=savings_threshold,
+                                        replan_trigger=replan_trigger)
+
+    def decide(self, t: float, streams: Sequence[Stream], *,
+               preempted: bool = False) -> Plan:
+        return self.adaptive.step(t, streams, force=preempted)
+
+
+class ScheduledPolicy(ReactivePolicy):
+    """Voluntary replans only on a fixed cadence (e.g. every 6 simulated
+    hours); demand infeasibility and preemptions still replan immediately."""
+
+    def __init__(self, manager: ResourceManager, every_h: float = 6.0,
+                 strategy: str = "FFD",
+                 savings_threshold: float = 0.10) -> None:
+        last = [None]
+
+        def on_schedule(t, streams, plan) -> bool:
+            # elapsed-time cadence, robust to tick sizes that do not divide
+            # every_h (a modulo test would fire rarely or never for those)
+            if last[0] is None or t - last[0] >= every_h - 1e-9:
+                last[0] = t
+                return True
+            return False
+
+        super().__init__(manager, strategy=strategy,
+                         savings_threshold=savings_threshold,
+                         replan_trigger=on_schedule, name="scheduled")
+        self.every_h = every_h
+
+
+class PredictiveEWMAPolicy(ReactivePolicy):
+    """Plan for a one-tick-ahead forecast: EWMA-smoothed per-stream trend,
+    floored at current demand so falling forecasts never under-provision."""
+
+    def __init__(self, manager: ResourceManager, strategy: str = "FFD",
+                 savings_threshold: float = 0.10, alpha: float = 0.3,
+                 lead_ticks: float = 2.0, cap_fps: float = 12.0) -> None:
+        super().__init__(manager, strategy=strategy,
+                         savings_threshold=savings_threshold,
+                         name="predictive-ewma")
+        self.alpha = alpha
+        self.lead_ticks = lead_ticks
+        self.cap_fps = cap_fps
+        self._prev_fps: dict[str, float] = {}
+        self._trend: dict[str, float] = {}
+
+    def forecast(self, streams: Sequence[Stream]) -> list[Stream]:
+        out = []
+        for s in streams:
+            prev = self._prev_fps.get(s.stream_id, s.fps)
+            trend = s.fps - prev
+            ewma = ((1 - self.alpha) * self._trend.get(s.stream_id, 0.0)
+                    + self.alpha * trend)
+            self._trend[s.stream_id] = ewma
+            self._prev_fps[s.stream_id] = s.fps
+            f = max(s.fps, s.fps + ewma * self.lead_ticks)
+            out.append(dataclasses.replace(
+                s, fps=round(min(f, self.cap_fps), 3)))
+        return out
+
+    def decide(self, t: float, streams: Sequence[Stream], *,
+               preempted: bool = False) -> Plan:
+        return self.adaptive.step(t, self.forecast(streams), force=preempted)

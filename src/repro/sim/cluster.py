@@ -1,0 +1,216 @@
+"""Simulated cluster: rented instances, boot delays, and the spot market.
+
+The planner emits a :class:`~repro.core.strategies.Plan` (bins of streams on
+(type, location) choices); the cluster is the *physical* side of that plan —
+instances take time to boot, keep running until terminated, and, when rented
+on the spot market, can be reclaimed mid-tick by a preemption event. Capacity
+accounting (instance-hours by region/type/market) feeds the ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.core.strategies import Plan
+
+ONDEMAND = "ondemand"
+SPOT = "spot"
+
+
+@dataclasses.dataclass
+class SimInstance:
+    """One rented instance over its lifetime in simulated hours."""
+
+    instance_id: str
+    type_name: str
+    location: str
+    price: float                      # on-demand $/h reference price
+    market: str = ONDEMAND
+    boot_t: float = 0.0               # when the rental started (billing start)
+    ready_t: float = 0.0              # boot_t + boot delay (service start)
+    terminated_t: Optional[float] = None
+    preempted: bool = False
+
+    def _overlap(self, start: float, t0: float, t1: float) -> float:
+        end = self.terminated_t if self.terminated_t is not None else math.inf
+        return max(0.0, min(t1, end) - max(t0, start))
+
+    def billed_hours(self, t0: float, t1: float) -> float:
+        """Hours billed in [t0, t1): clouds charge from launch, not readiness."""
+        return self._overlap(self.boot_t, t0, t1)
+
+    def running_fraction(self, t0: float, t1: float) -> float:
+        """Fraction of [t0, t1) the instance could actually serve streams."""
+        if t1 <= t0:
+            return 0.0
+        return self._overlap(self.ready_t, t0, t1) / (t1 - t0)
+
+
+class SpotMarket:
+    """Per-region spot prices as a clamped multiplicative random walk, plus a
+    constant preemption hazard for spot instances.
+
+    ``multiplier(region)`` is the current spot/on-demand price ratio. The
+    walk is seeded, so the whole price history is a pure function of the
+    seed — two runs of a scenario see identical markets.
+    """
+
+    def __init__(self, regions: Iterable[str], *, discount: float = 0.35,
+                 volatility: float = 0.15, hazard_per_h: float = 0.08,
+                 seed: int = 0) -> None:
+        self.discount = discount
+        self.volatility = volatility
+        self.hazard_per_h = hazard_per_h
+        self._walk = {r: 1.0 for r in sorted(regions)}
+        self._rng = np.random.default_rng(seed)
+
+    def multiplier(self, region: str) -> float:
+        return self.discount * self._walk.get(region, 1.0)
+
+    def step(self, dt_h: float) -> None:
+        """Advance every region's price walk by dt hours."""
+        sigma = self.volatility * math.sqrt(max(dt_h, 1e-9))
+        for r in sorted(self._walk):
+            self._walk[r] = float(np.clip(
+                self._walk[r] * math.exp(self._rng.normal(0.0, sigma)),
+                0.5, 2.5))
+
+    def draw_preemptions(self, t: float, dt_h: float,
+                         spot_instances: Iterable[SimInstance]
+                         ) -> list[tuple[float, str]]:
+        """(time, instance_id) reclaim events inside [t, t + dt).
+
+        Preemption probability over the interval follows an exponential
+        hazard scaled by the price walk: when the region's spot price runs
+        hot, reclaims are more likely — the classic spot failure mode.
+        """
+        out: list[tuple[float, str]] = []
+        for inst in spot_instances:
+            hazard = self.hazard_per_h * self._walk.get(inst.location, 1.0)
+            p = 1.0 - math.exp(-hazard * dt_h)
+            if self._rng.random() < p:
+                out.append((t + float(self._rng.uniform(0.0, dt_h)),
+                            inst.instance_id))
+        return out
+
+
+class Cluster:
+    """Tracks rented instances and reconciles them against each new plan."""
+
+    def __init__(self, *, boot_delay_h: float = 0.05,
+                 spot_fraction: float = 0.0, seed: int = 0) -> None:
+        self.boot_delay_h = boot_delay_h
+        self.spot_fraction = spot_fraction
+        self.instances: dict[str, SimInstance] = {}
+        self._counter = 0
+        self._rng = np.random.default_rng(seed)
+
+    # -- queries -------------------------------------------------------------
+
+    def live(self) -> list[SimInstance]:
+        return [i for i in self.instances.values() if i.terminated_t is None]
+
+    def live_spot(self) -> list[SimInstance]:
+        return [i for i in self.live() if i.market == SPOT]
+
+    def get(self, instance_id: str) -> SimInstance:
+        return self.instances[instance_id]
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def _boot(self, t: float, choice_key: str, type_name: str, location: str,
+              price: float) -> SimInstance:
+        self._counter += 1
+        market = SPOT if (self.spot_fraction > 0 and
+                          self._rng.random() < self.spot_fraction) else ONDEMAND
+        inst = SimInstance(
+            instance_id=f"{choice_key}#{self._counter}",
+            type_name=type_name, location=location, price=price,
+            market=market, boot_t=t, ready_t=t + self.boot_delay_h)
+        self.instances[inst.instance_id] = inst
+        return inst
+
+    def terminate(self, instance_id: str, t: float,
+                  preempted: bool = False) -> None:
+        """Schedule termination at ``t`` (which may be in the future, for
+        drains). An earlier termination — e.g. a preemption landing during a
+        drain — wins; a later one never extends a lifetime."""
+        inst = self.instances[instance_id]
+        if inst.terminated_t is None or t < inst.terminated_t:
+            inst.terminated_t = t
+            inst.preempted = preempted or inst.preempted
+
+    def reconcile(self, t: float, plan: Plan,
+                  drain_h: float = 0.0) -> dict[str, str]:
+        """Make the physical fleet match the plan; map streams to instances.
+
+        Bins are matched to live instances of the same (type, location)
+        choice oldest-first, so long-running instances keep their streams and
+        scale-down retires the newest rentals. Missing instances boot now
+        (ready after the boot delay); surplus ones drain for ``drain_h``
+        before terminating (make-before-break: the old placement keeps
+        serving while replacements boot — billed, like any lame-duck VM).
+        Returns ``{stream_id: instance_id}`` for the ledger's accounting.
+        """
+        by_key: dict[str, list] = {}
+        for b in plan.solution.bins:
+            ch = plan.problem.choices[b.choice]
+            by_key.setdefault(ch.key, []).append((b, ch))
+
+        live_by_key: dict[str, list[SimInstance]] = {}
+        for inst in self.live():
+            key = f"{inst.type_name}@{inst.location}"
+            live_by_key.setdefault(key, []).append(inst)
+        for insts in live_by_key.values():
+            insts.sort(key=lambda i: (i.boot_t, i.instance_id))
+
+        assignment: dict[str, str] = {}
+        for key in sorted(by_key):
+            bins = by_key[key]
+            have = live_by_key.get(key, [])
+            for n, (b, ch) in enumerate(bins):
+                if n < len(have):
+                    inst = have[n]
+                else:
+                    inst = self._boot(t, ch.key, ch.type_name, ch.location,
+                                      ch.price)
+                for i in b.items:
+                    assignment[plan.problem.items[i].key] = inst.instance_id
+            for extra in have[len(bins):]:
+                self.terminate(extra.instance_id, t + drain_h)
+        for key, insts in live_by_key.items():
+            if key not in by_key:
+                for inst in insts:
+                    self.terminate(inst.instance_id, t + drain_h)
+        return assignment
+
+    # -- capacity / billing --------------------------------------------------
+
+    def accrue(self, t0: float, t1: float,
+               market: Optional[SpotMarket] = None
+               ) -> tuple[float, dict[tuple[str, str, str], float]]:
+        """Cost and instance-hours accrued over [t0, t1).
+
+        Spot instances bill at the market's current multiplier; on-demand at
+        the catalog price. Returns (dollars, {(location, type, market): h}).
+        """
+        cost = 0.0
+        hours: dict[tuple[str, str, str], float] = {}
+        # dict insertion order (boot order) is deterministic; skipping
+        # long-terminated instances keeps per-tick billing O(live + recent)
+        for inst in self.instances.values():
+            if inst.terminated_t is not None and inst.terminated_t <= t0:
+                continue
+            h = inst.billed_hours(t0, t1)
+            if h <= 0:
+                continue
+            rate = inst.price
+            if inst.market == SPOT and market is not None:
+                rate *= market.multiplier(inst.location)
+            cost += rate * h
+            k = (inst.location, inst.type_name, inst.market)
+            hours[k] = hours.get(k, 0.0) + h
+        return cost, hours

@@ -1,0 +1,172 @@
+"""Composable demand generators: the fleet's frame-rate needs over time.
+
+A demand model maps simulated UTC hours to the set of demanded
+:class:`~repro.core.workload.Stream` objects. The base generator gives every
+camera a diurnal rush-hour curve in its *local* (solar) time via
+``core.geo.local_hour``, so a worldwide fleet ramps region by region as the
+sun moves. Wrappers compose on top: Poisson camera churn (arrivals with
+exponential lifetimes), flash-crowd events (a region's rates spike for a
+window), and day/night program-mix shifts. Everything is a pure, seeded
+function of time — two scans of the same model are identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.core import geo
+from repro.core.workload import PROGRAMS, Stream
+
+
+class DemandModel(Protocol):
+    def streams_at(self, t_h: float) -> list[Stream]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class CameraSpec:
+    """One camera's demand profile: a diurnal curve between base and peak."""
+
+    stream_id: str
+    camera: str                  # key in geo.CAMERAS
+    program: str                 # key in workload.PROGRAMS
+    base_fps: float
+    peak_fps: float
+
+
+def rush_hour_fps(local_h: float, base: float, peak: float,
+                  width_h: float = 1.5) -> float:
+    """Double-peaked diurnal curve: morning (8:30) and evening (17:30) rush
+    hours as Gaussian bumps over a quiet base rate (paper Fig. 5's shape)."""
+    bump = (math.exp(-((local_h - 8.5) / width_h) ** 2)
+            + math.exp(-((local_h - 17.5) / width_h) ** 2))
+    return base + (peak - base) * min(1.0, bump)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalFleet:
+    """Each camera follows the rush-hour curve in its own local time."""
+
+    cameras: tuple[CameraSpec, ...]
+    width_h: float = 1.5
+
+    def streams_at(self, t_h: float) -> list[Stream]:
+        out = []
+        for c in self.cameras:
+            fps = rush_hour_fps(geo.local_hour(t_h, c.camera),
+                                c.base_fps, c.peak_fps, self.width_h)
+            out.append(Stream(c.stream_id, PROGRAMS[c.program],
+                              fps=round(fps, 3), camera=c.camera))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonChurn:
+    """Cameras come and go: Poisson arrivals over the horizon, each living an
+    exponential lifetime, cycling through a pool of camera templates. The
+    whole arrival schedule is drawn once at construction from the seed."""
+
+    inner: DemandModel
+    templates: tuple[CameraSpec, ...]
+    rate_per_h: float = 0.5
+    mean_lifetime_h: float = 6.0
+    horizon_h: float = 24.0
+    seed: int = 0
+    _schedule: tuple[tuple[float, float, CameraSpec], ...] = ()
+
+    def __post_init__(self) -> None:
+        rng = np.random.default_rng(self.seed)
+        n = int(rng.poisson(self.rate_per_h * self.horizon_h))
+        arrivals = np.sort(rng.uniform(0.0, self.horizon_h, n))
+        lifetimes = rng.exponential(self.mean_lifetime_h, n)
+        sched = []
+        for k, (a, life) in enumerate(zip(arrivals, lifetimes)):
+            tpl = self.templates[k % len(self.templates)]
+            spec = dataclasses.replace(tpl, stream_id=f"{tpl.stream_id}-churn{k}")
+            sched.append((float(a), float(a + life), spec))
+        object.__setattr__(self, "_schedule", tuple(sched))
+
+    def streams_at(self, t_h: float) -> list[Stream]:
+        out = self.inner.streams_at(t_h)
+        for start, end, c in self._schedule:
+            if start <= t_h < end:
+                fps = rush_hour_fps(geo.local_hour(t_h, c.camera),
+                                    c.base_fps, c.peak_fps)
+                out.append(Stream(c.stream_id, PROGRAMS[c.program],
+                                  fps=round(fps, 3), camera=c.camera))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashCrowd:
+    """An event (match, incident) multiplies demand on selected cameras for a
+    window. The spike is capped at ``cap_fps`` *and* at each stream's own
+    program feasibility ceiling (the rate a 90%-capped GPU sustains —
+    ~14 fps for ZF but only ~2.8 for VGG16), so a boosted stream can always
+    still be planned somewhere."""
+
+    inner: DemandModel
+    start_h: float
+    duration_h: float
+    multiplier: float
+    cameras: Optional[frozenset[str]] = None      # geo camera ids; None = all
+    cap_fps: float = 12.0
+
+    def streams_at(self, t_h: float) -> list[Stream]:
+        out = self.inner.streams_at(t_h)
+        if not (self.start_h <= t_h < self.start_h + self.duration_h):
+            return out
+        boosted = []
+        for s in out:
+            if self.cameras is None or s.camera in self.cameras:
+                cap = min(self.cap_fps, s.program.max_gpu_fps())
+                f = min(s.fps * self.multiplier, cap)
+                # truncate (never round up) so the cap stays a hard ceiling
+                s = dataclasses.replace(s, fps=math.floor(f * 1000) / 1000)
+            boosted.append(s)
+        return boosted
+
+
+@dataclasses.dataclass(frozen=True)
+class MixShift:
+    """Program-mix shift: a deterministic fraction of cameras switches to a
+    different (cheaper, e.g. VGG16 at low rates) analysis program during
+    local night hours — monitoring instead of live detection."""
+
+    inner: DemandModel
+    night_program: str = "VGG16"
+    fraction: float = 0.3
+    night_start_h: float = 22.0
+    night_end_h: float = 6.0
+
+    def _selected(self, stream_id: str) -> bool:
+        return (zlib.crc32(stream_id.encode()) % 1000) < self.fraction * 1000
+
+    def streams_at(self, t_h: float) -> list[Stream]:
+        out = []
+        for s in self.inner.streams_at(t_h):
+            if s.camera is not None and self._selected(s.stream_id):
+                lh = geo.local_hour(t_h, s.camera)
+                if lh >= self.night_start_h or lh < self.night_end_h:
+                    s = dataclasses.replace(
+                        s, program=PROGRAMS[self.night_program])
+            out.append(s)
+        return out
+
+
+def peak_streams(demand: DemandModel, horizon_h: float,
+                 step_h: float = 0.5) -> list[Stream]:
+    """Scan the horizon and return every stream at its maximum demanded rate
+    — what a static peak-provisioned deployment must plan for."""
+    best: dict[str, Stream] = {}
+    t = 0.0
+    while t < horizon_h:
+        for s in demand.streams_at(t):
+            cur = best.get(s.stream_id)
+            if cur is None or s.fps > cur.fps:
+                best[s.stream_id] = s
+        t += step_h
+    return [best[k] for k in sorted(best)]

@@ -1,0 +1,167 @@
+"""The fleet simulator: demand → policy → cluster → ledger, in event order.
+
+One :class:`FleetSimulator` run replays a demand model against an
+autoscaling policy over simulated days. The event queue interleaves
+control-loop ticks with spot preemptions; every demanded frame ends the run
+either analyzed or dropped (never silently lost), and every instance-hour is
+billed — so policies are comparable on exactly the two axes the paper cares
+about: dollars and service.
+
+Per tick ``t`` (all times in simulated hours):
+
+1. account the interval that just ended, using the demand and stream→instance
+   assignment that were in force (preemptions that fired mid-interval have
+   already truncated their instances' service windows);
+2. read the demand model, tell the policy whether a preemption hit since its
+   last decision (``decide(..., preempted=True)`` forces adaptive replans,
+   replaying orphaned streams), and reconcile the cluster to the new plan —
+   missing instances boot with a delay, surplus ones terminate;
+3. advance the spot market's price walk and schedule the preemptions it
+   draws for the coming interval.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.catalog import Catalog
+from repro.sim import events as ev
+from repro.sim.cluster import Cluster, SpotMarket
+from repro.sim.demand import DemandModel
+from repro.sim.ledger import Ledger, ServiceCalibration, TickRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    duration_h: float = 24.0
+    dt_h: float = 1.0
+    boot_delay_h: float = 0.05           # 3 minutes
+    spot_fraction: float = 0.0           # fraction of boots on the spot market
+    spot_discount: float = 0.35          # spot base price / on-demand price
+    spot_volatility: float = 0.15
+    preempt_hazard_per_h: float = 0.08
+    seed: int = 0
+
+
+class FleetSimulator:
+    def __init__(self, demand: DemandModel, policy, catalog: Catalog,
+                 config: SimConfig = SimConfig(),
+                 calibration: Optional[ServiceCalibration] = None) -> None:
+        self.demand = demand
+        self.policy = policy
+        self.config = config
+        self.calibration = calibration
+        self.cluster = Cluster(boot_delay_h=config.boot_delay_h,
+                               spot_fraction=config.spot_fraction,
+                               seed=config.seed + 1)
+        self.market = SpotMarket(catalog.locations,
+                                 discount=config.spot_discount,
+                                 volatility=config.spot_volatility,
+                                 hazard_per_h=config.preempt_hazard_per_h,
+                                 seed=config.seed + 2)
+        self.ledger = Ledger()
+
+    def run(self) -> Ledger:
+        cfg = self.config
+        q = ev.EventQueue()
+        n_ticks = int(round(cfg.duration_h / cfg.dt_h))
+        for k in range(n_ticks):
+            q.push(k * cfg.dt_h, ev.TICK)
+        q.push(cfg.duration_h, ev.END)
+
+        current_streams = []                 # demand in force this interval
+        assignment: dict[str, str] = {}      # stream_id -> instance_id
+        prev_assignment: dict[str, str] = {}
+        prev_fps: dict[str, float] = {}
+        prev_t = 0.0
+        preempted_since_decide = 0
+        preemptions_this_interval = 0
+        migrations_this_interval = 0
+
+        while q:
+            e = q.pop()
+            if e.kind == ev.PREEMPT:
+                inst = self.cluster.instances.get(e.payload)
+                if inst is not None and (inst.terminated_t is None
+                                         or inst.terminated_t > e.time):
+                    self.cluster.terminate(inst.instance_id, e.time,
+                                           preempted=True)
+                    preempted_since_decide += 1
+                    preemptions_this_interval += 1
+                continue
+            if e.kind not in (ev.TICK, ev.END):
+                continue
+
+            t = e.time
+            if t > prev_t:
+                self._account(prev_t, t, current_streams, assignment,
+                              prev_assignment, prev_fps,
+                              preemptions_this_interval,
+                              migrations_this_interval)
+                preemptions_this_interval = 0
+                prev_t = t
+            if e.kind == ev.END:
+                break
+
+            prev_assignment = assignment
+            prev_fps = {s.stream_id: s.fps for s in current_streams}
+            current_streams = self.demand.streams_at(t)
+            plan = self.policy.decide(t, current_streams,
+                                      preempted=preempted_since_decide > 0)
+            preempted_since_decide = 0
+            assignment = self.cluster.reconcile(t, plan,
+                                                drain_h=cfg.boot_delay_h)
+            # physical migrations: streams whose instance changed, including
+            # preemption replays that a plan-level diff cannot see (the new
+            # plan may be structurally identical while the orphaned streams
+            # land on freshly booted replacements)
+            migrations_this_interval = sum(
+                1 for sid, iid in assignment.items()
+                if prev_assignment.get(sid) != iid)
+
+            self.market.step(cfg.dt_h)
+            if cfg.spot_fraction > 0:
+                for when, iid in self.market.draw_preemptions(
+                        t, cfg.dt_h, self.cluster.live_spot()):
+                    q.push(when, ev.PREEMPT, iid)
+        return self.ledger
+
+    def _account(self, t0: float, t1: float, streams, assignment,
+                 prev_assignment, prev_fps, preemptions: int,
+                 migrations: int) -> None:
+        """Frames and dollars for [t0, t1).
+
+        While a stream's planned instance is still booting, its *previous*
+        placement — kept alive by the reconcile drain window — continues to
+        serve, but only up to the rate it was planned for (make-before-break
+        migration: a scale-up drops only the incremental demand during the
+        boot, unless the old instance was preempted away). The credit only
+        applies when the old instance is *actually* draining — an instance
+        the new plan reuses for other streams has no spare capacity to lend.
+        """
+        dt_s = (t1 - t0) * 3600.0           # frame counts are fps x seconds
+        busy = set(assignment.values())     # instances serving the new plan
+        demanded = analyzed = 0.0
+        for s in streams:
+            d = s.fps * dt_s
+            demanded += d
+            iid = assignment.get(s.stream_id)
+            frac = (self.cluster.instances[iid].running_fraction(t0, t1)
+                    if iid is not None else 0.0)
+            a = d * frac
+            old = prev_assignment.get(s.stream_id)
+            if old is not None and old != iid and old not in busy:
+                old_rate = min(s.fps, prev_fps.get(s.stream_id, 0.0))
+                a = max(a, old_rate * dt_s
+                        * self.cluster.instances[old].running_fraction(t0, t1))
+            a = min(a, d)
+            if self.calibration is not None:
+                a = min(a, self.calibration.frame_rate_cap(s.stream_id) * dt_s)
+            analyzed += a
+        cost, hours = self.cluster.accrue(t0, t1, self.market)
+        self.ledger.add_tick(TickRecord(
+            t=t0, cost=cost, frames_demanded=demanded,
+            frames_analyzed=analyzed, frames_dropped=demanded - analyzed,
+            migrations=migrations, preemptions=preemptions,
+            instances_live=len(self.cluster.live()), streams=len(streams),
+        ), hours)

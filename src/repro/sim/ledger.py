@@ -1,0 +1,136 @@
+"""Cost/SLO ledger and the serving-measurement calibration path.
+
+The ledger is the simulator's single source of truth for outcomes: per-tick
+dollars, frames demanded vs analyzed vs dropped (conservation holds exactly:
+``demanded == analyzed + dropped`` every tick), migrations, preemptions, and
+instance-hours by (location, type, market). ``totals()`` is a deterministic
+summary — the acceptance test runs a scenario twice under one seed and
+asserts the dicts are equal.
+
+``ServiceCalibration`` closes the loop with the serving layer: a
+``ContinuousBatchingEngine``'s ``measured_rates()`` (tokens/sec per stream)
+divided by tokens-per-frame bounds how many frames a simulated stream can
+actually have analyzed per tick, and the same rates feed
+``tpu_catalog.streams_from_measured`` to build packing items — the paper's
+profile-then-pack loop, replayed inside the simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceCalibration:
+    """Measured serving rates mapped onto the simulator's frame accounting."""
+
+    tokens_per_frame: float = 8.0
+    rates_tokens_per_s: Mapping[str, float] = dataclasses.field(
+        default_factory=dict)
+    default_rate: Optional[float] = None     # for streams never measured
+
+    @classmethod
+    def from_engine(cls, engine,
+                    tokens_per_frame: float = 8.0) -> "ServiceCalibration":
+        """Calibrate from a serving engine's ``measured_rates()`` export; the
+        mean measured rate covers streams the engine never saw."""
+        rates = dict(engine.measured_rates())
+        default = (sum(rates.values()) / len(rates)) if rates else None
+        return cls(tokens_per_frame=tokens_per_frame,
+                   rates_tokens_per_s=rates, default_rate=default)
+
+    def frame_rate_cap(self, stream_id: str) -> float:
+        """Frames/sec the serving layer sustains for this stream (inf if
+        uncalibrated)."""
+        rate = self.rates_tokens_per_s.get(stream_id, self.default_rate)
+        if rate is None:
+            return math.inf
+        return rate / self.tokens_per_frame
+
+    def packing_streams(self, arch: str, *, kv_seq: int = 32_768):
+        """The same measurements as TPU packing items (profile-then-pack)."""
+        from repro.core.tpu_catalog import streams_from_measured
+        return streams_from_measured(arch, dict(self.rates_tokens_per_s),
+                                     kv_seq=kv_seq)
+
+
+@dataclasses.dataclass(frozen=True)
+class TickRecord:
+    t: float
+    cost: float                   # $ accrued this tick
+    frames_demanded: float
+    frames_analyzed: float
+    frames_dropped: float
+    migrations: int
+    preemptions: int
+    instances_live: int
+    streams: int
+
+
+class Ledger:
+    """Append-only account of everything the simulation spent and served."""
+
+    def __init__(self) -> None:
+        self.records: list[TickRecord] = []
+        self.instance_hours: dict[tuple[str, str, str], float] = {}
+
+    def add_tick(self, rec: TickRecord,
+                 hours: Mapping[tuple[str, str, str], float]) -> None:
+        if abs(rec.frames_demanded
+               - (rec.frames_analyzed + rec.frames_dropped)) \
+                > 1e-6 * max(1.0, rec.frames_demanded):
+            raise ValueError(
+                f"frame conservation violated at t={rec.t}: "
+                f"{rec.frames_demanded} demanded != {rec.frames_analyzed} "
+                f"analyzed + {rec.frames_dropped} dropped")
+        self.records.append(rec)
+        for k, h in hours.items():
+            self.instance_hours[k] = self.instance_hours.get(k, 0.0) + h
+
+    # -- aggregates ----------------------------------------------------------
+
+    @property
+    def total_cost(self) -> float:
+        return sum(r.cost for r in self.records)
+
+    @property
+    def frames_demanded(self) -> float:
+        return sum(r.frames_demanded for r in self.records)
+
+    @property
+    def frames_analyzed(self) -> float:
+        return sum(r.frames_analyzed for r in self.records)
+
+    @property
+    def frames_dropped(self) -> float:
+        return sum(r.frames_dropped for r in self.records)
+
+    @property
+    def migrations(self) -> int:
+        return sum(r.migrations for r in self.records)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(r.preemptions for r in self.records)
+
+    def slo_attainment(self) -> float:
+        """Fraction of demanded frames actually analyzed on time."""
+        d = self.frames_demanded
+        return (self.frames_analyzed / d) if d > 0 else 1.0
+
+    def totals(self) -> dict:
+        """Deterministic summary (rounded to stable precision) — equal across
+        two runs of the same seeded scenario."""
+        return {
+            "ticks": len(self.records),
+            "total_cost": round(self.total_cost, 6),
+            "frames_demanded": round(self.frames_demanded, 6),
+            "frames_analyzed": round(self.frames_analyzed, 6),
+            "frames_dropped": round(self.frames_dropped, 6),
+            "slo_attainment": round(self.slo_attainment(), 6),
+            "migrations": self.migrations,
+            "preemptions": self.preemptions,
+            "instance_hours": {"/".join(k): round(v, 6)
+                               for k, v in sorted(self.instance_hours.items())},
+        }

@@ -1,0 +1,139 @@
+"""Scenario library: ready-to-run fleet days.
+
+Each scenario bundles a demand model, a simulation config, and the catalog
+to plan against. ``SCENARIOS`` maps names to zero-argument factories so
+benchmarks and tests can run them by name; every factory takes optional
+overrides (stream count, duration, seed) for scaling studies.
+
+* ``steady``            — flat demand; sanity floor (adaptive ≈ static).
+* ``rush_hour``         — US cameras, synchronized morning/evening peaks
+                          (the paper's Fig. 5 shape at fleet scale).
+* ``follow_the_sun``    — worldwide cameras, the same local curve: peaks
+                          rotate around the globe; night cameras shift a
+                          fraction of the fleet to a cheaper program.
+* ``spot_heavy``        — rush hour with most capacity on the spot market:
+                          cheap, but preemptions keep replaying streams.
+* ``flash_crowd``       — steady fleet with Poisson camera churn and an
+                          8x two-hour demand spike on European cameras.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Optional, Sequence
+
+from repro.core import geo
+from repro.core.catalog import Catalog, fig6_catalog
+from repro.sim.demand import (CameraSpec, DemandModel, DiurnalFleet,
+                              FlashCrowd, MixShift, PoissonChurn,
+                              peak_streams)
+from repro.sim.fleet import SimConfig
+
+US_CAMERAS = ("nyc", "chicago", "la", "seattle")
+EU_CAMERAS = ("london", "paris", "berlin")
+ALL_CAMERAS = tuple(sorted(geo.CAMERAS))
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    demand: DemandModel
+    config: SimConfig
+    catalog_factory: Callable[[], Catalog] = fig6_catalog
+    description: str = ""
+
+    def catalog(self) -> Catalog:
+        return self.catalog_factory()
+
+    def peak_streams(self, step_h: float = 0.5):
+        """Peak demand over the horizon — the static baseline's plan input."""
+        return peak_streams(self.demand, self.config.duration_h, step_h)
+
+
+def _fleet(cameras: Sequence[str], n_streams: int, *, zf_peak: float = 6.0,
+           zf_base: float = 0.2, vgg_every: int = 4) -> tuple[CameraSpec, ...]:
+    """n_streams specs round-robined over cameras; every ``vgg_every``-th
+    stream runs VGG16 at low rates (its CPU/GPU profiles top out ~2 fps),
+    the rest run ZF with the full rush-hour swing."""
+    specs = []
+    cams = itertools.cycle(cameras)
+    for i in range(n_streams):
+        cam = next(cams)
+        if vgg_every and i % vgg_every == vgg_every - 1:
+            specs.append(CameraSpec(f"vgg-{cam}-{i}", cam, "VGG16",
+                                    base_fps=0.1, peak_fps=1.5))
+        else:
+            specs.append(CameraSpec(f"zf-{cam}-{i}", cam, "ZF",
+                                    base_fps=zf_base, peak_fps=zf_peak))
+    return tuple(specs)
+
+
+def steady(n_streams: int = 36, duration_h: float = 24.0,
+           seed: int = 0) -> Scenario:
+    specs = tuple(dataclasses.replace(c, peak_fps=c.base_fps)
+                  for c in _fleet(ALL_CAMERAS, n_streams,
+                                  zf_base=1.0, zf_peak=1.0))
+    return Scenario(
+        name="steady",
+        demand=DiurnalFleet(specs),
+        config=SimConfig(duration_h=duration_h, seed=seed),
+        description="flat demand worldwide; adaptive should match static")
+
+
+def rush_hour(n_streams: int = 108, duration_h: float = 24.0,
+              seed: int = 0) -> Scenario:
+    return Scenario(
+        name="rush_hour",
+        demand=DiurnalFleet(_fleet(US_CAMERAS, n_streams)),
+        config=SimConfig(duration_h=duration_h, seed=seed),
+        description="US fleet, synchronized diurnal peaks (paper Fig. 5)")
+
+
+def follow_the_sun(n_streams: int = 108, duration_h: float = 24.0,
+                   seed: int = 0) -> Scenario:
+    demand = MixShift(DiurnalFleet(_fleet(ALL_CAMERAS, n_streams)),
+                      night_program="VGG16", fraction=0.3)
+    return Scenario(
+        name="follow_the_sun",
+        demand=demand,
+        config=SimConfig(duration_h=duration_h, seed=seed),
+        description="worldwide fleet; peaks rotate with local rush hours, "
+                    "night cameras shift program mix")
+
+
+def spot_heavy(n_streams: int = 108, duration_h: float = 24.0,
+               seed: int = 0) -> Scenario:
+    return Scenario(
+        name="spot_heavy",
+        demand=DiurnalFleet(_fleet(US_CAMERAS, n_streams)),
+        config=SimConfig(duration_h=duration_h, seed=seed,
+                         spot_fraction=0.85, preempt_hazard_per_h=0.12),
+        description="rush hour mostly on spot: cheaper instance-hours, "
+                    "preemptions replayed through replanning")
+
+
+def flash_crowd(n_streams: int = 36, duration_h: float = 24.0,
+                seed: int = 0) -> Scenario:
+    base = DiurnalFleet(tuple(
+        dataclasses.replace(c, peak_fps=max(c.base_fps, c.peak_fps / 3))
+        for c in _fleet(ALL_CAMERAS, n_streams, zf_base=0.5)))
+    churned = PoissonChurn(base, templates=_fleet(ALL_CAMERAS, 8,
+                                                  zf_base=0.3, zf_peak=2.0),
+                           rate_per_h=0.5, mean_lifetime_h=6.0,
+                           horizon_h=duration_h, seed=seed + 7)
+    demand = FlashCrowd(churned, start_h=12.0, duration_h=2.0,
+                        multiplier=8.0, cameras=frozenset(EU_CAMERAS))
+    return Scenario(
+        name="flash_crowd",
+        demand=demand,
+        config=SimConfig(duration_h=duration_h, dt_h=0.5, seed=seed),
+        description="camera churn plus an 8x two-hour European demand spike")
+
+
+SCENARIOS: dict[str, Callable[..., Scenario]] = {
+    "steady": steady,
+    "rush_hour": rush_hour,
+    "follow_the_sun": follow_the_sun,
+    "spot_heavy": spot_heavy,
+    "flash_crowd": flash_crowd,
+}

@@ -64,6 +64,19 @@ def test_rtt_feasibility_respected(setup):
             assert geo.max_fps(cam, loc) >= fps
 
 
+def test_rtt_feasibility_at_exact_boundary():
+    """fps * rtt == RTT_BUDGET_MS is feasible (the circle includes its rim);
+    any frame rate strictly above it is not."""
+    cam, region = "london", "eu-west-1"
+    boundary_fps = geo.max_fps(cam, region)
+    assert boundary_fps * geo.rtt_ms(cam, region) == pytest.approx(
+        geo.RTT_BUDGET_MS)
+    regions = list(geo.DATACENTERS)
+    assert region in geo.feasible_regions(cam, boundary_fps, regions)
+    assert region not in geo.feasible_regions(
+        cam, boundary_fps * (1 + 1e-12), regions)
+
+
 def test_geo_model():
     # nearer datacenter -> lower RTT -> higher achievable fps
     assert geo.rtt_ms("nyc", "us-east-1") < geo.rtt_ms("nyc", "ap-northeast-1")

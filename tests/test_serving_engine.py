@@ -147,3 +147,64 @@ def test_submit_rejects_oversized_request():
     toks = np.zeros(12, np.int32)
     with pytest.raises(ValueError):
         eng.submit(Request("big", toks, max_new_tokens=8))
+
+
+def test_report_with_no_completions_never_raises():
+    """Percentiles of an empty completion list are None, not an error."""
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2,
+                                   cache_len=CACHE_LEN)
+    rep = eng.report()
+    assert rep["requests"] == 0
+    assert rep["tokens_per_s"] == 0.0
+    assert rep["p50_latency_s"] is None
+    assert rep["p99_latency_s"] is None
+    assert rep["slo_attainment"] == 1.0
+    assert rep["slot_occupancy"] == 0.0
+    assert eng.measured_rates() == {}
+
+
+def test_measured_rates_per_stream_export():
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2,
+                                   cache_len=CACHE_LEN)
+    rng = np.random.default_rng(4)
+    toks = lambda: rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+    for i in range(3):
+        eng.submit(Request(f"r{i}", toks(), max_new_tokens=4,
+                           stream_id=f"cam-{i % 2}"))
+    eng.drain()
+    rates = eng.measured_rates()
+    assert set(rates) == {"cam-0", "cam-1"}
+    assert all(r > 0 for r in rates.values())
+    # per-stream tallies account for every generated token
+    total = sum(rates.values()) * eng.stats["wall_s"]
+    assert total == pytest.approx(eng.stats["tokens_generated"])
+    eng.reset_stats()
+    assert eng.measured_rates() == {}
+
+
+class _CollectingEngine:
+    """submit()-only stand-in so StreamSimulator runs without a model."""
+
+    def __init__(self):
+        self.requests = []
+
+    def submit(self, req):
+        self.requests.append(req)
+
+
+def test_tick_fractional_fps_accumulates_exactly():
+    eng = _CollectingEngine()
+    sim = StreamSimulator(eng, prompt_len=4, new_tokens=2, vocab=100)
+    for _ in range(4):
+        sim.tick({"half": 0.5}, dt_s=1.0)
+    assert len(eng.requests) == 2          # 0.5 fps * 4 s = 2 frames exactly
+    for _ in range(8):
+        sim.tick({"half": 0.5, "quarter": 0.25}, dt_s=1.0)
+    by_stream = {}
+    for r in eng.requests:
+        by_stream[r.stream_id] = by_stream.get(r.stream_id, 0) + 1
+    assert by_stream == {"half": 6, "quarter": 2}
+    # the frame period is the deadline budget
+    assert eng.requests[-1].deadline_s in (2.0, 4.0)
