@@ -1,0 +1,182 @@
+"""Benchmark (BEYOND-PAPER): replan churn — REPAIR vs FFD full replan.
+
+Measures what the min-migration repair planner (core/repair.py) buys on
+scenarios where forced replans are constant: ``spot_heavy`` (preemptions
+replay streams every tick), ``rush_hour`` (demand swings force evictions and
+scale-down), and ``churn_storm`` (arrivals + departures + preemptions at
+once). For each scenario both policies replay the identical seeded demand
+and spot market; the ledgers are compared on total migrations, total cost,
+and SLO attainment.
+
+Acceptance (asserted here and in CI via ``--smoke``): on ``spot_heavy``
+(24h x 108 streams, fixed seed), REPAIR cuts total migrations by >= 60%
+vs FFD full replan, stays within 10% of its total cost, loses no frames
+(ledger conservation holds on both runs), and the whole suite finishes in
+under 60 s. ``--out`` writes the summary JSON (uploaded as a CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# runnable as `python benchmarks/replan_churn.py` from the repo root
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core.manager import ResourceManager
+from repro.sim import (FleetSimulator, ReactivePolicy, RepairPolicy,
+                       SCENARIOS)
+
+N_STREAMS = 108
+DURATION_H = 24.0
+SEED = 0
+
+# acceptance bars (ISSUE 3): migration reduction and cost-gap ceiling on
+# spot_heavy, and a wall-clock budget for the whole suite
+MIN_REDUCTION = 0.60
+MAX_COST_GAP = 0.10
+TIME_BUDGET_S = 60.0
+
+
+def _conserved(ledger) -> bool:
+    return all(abs(r.frames_demanded - r.frames_analyzed - r.frames_dropped)
+               < 1e-6 * max(1.0, r.frames_demanded) for r in ledger.records)
+
+
+def _compare(name: str, n_streams: int) -> dict:
+    sc = SCENARIOS[name](n_streams=n_streams, duration_h=DURATION_H,
+                         seed=SEED)
+    cat = sc.catalog()
+    t0 = time.perf_counter()
+    ffd = FleetSimulator(sc.demand, ReactivePolicy(ResourceManager(cat)),
+                         cat, sc.config).run()
+    rep_policy = RepairPolicy(ResourceManager(cat),
+                              migration_budget=n_streams // 3,
+                              defrag_ratio=2.0)
+    rep = FleetSimulator(sc.demand, rep_policy, cat, sc.config).run()
+    elapsed = time.perf_counter() - t0
+    return {
+        "scenario": name,
+        "n_streams": n_streams,
+        "duration_h": DURATION_H,
+        "seed": SEED,
+        "ffd": ffd.totals(),
+        "repair": rep.totals(),
+        "migration_reduction": round(
+            1.0 - rep.migrations / max(1, ffd.migrations), 4),
+        "cost_gap": round(rep.total_cost / ffd.total_cost - 1.0, 4),
+        "slo_delta": round(rep.slo_attainment() - ffd.slo_attainment(), 6),
+        "defrags": rep.defrags,
+        "frames_conserved": _conserved(ffd) and _conserved(rep),
+        "elapsed_s": round(elapsed, 2),
+    }
+
+
+def compare_all() -> list[dict]:
+    return [_compare("spot_heavy", N_STREAMS),
+            _compare("rush_hour", N_STREAMS),
+            _compare("churn_storm", 72)]
+
+
+def check_acceptance(results: list[dict], total_elapsed: float) -> list[str]:
+    """Returns a list of violated acceptance bars (empty = pass)."""
+    spot = next(r for r in results if r["scenario"] == "spot_heavy")
+    bad = []
+    if spot["migration_reduction"] < MIN_REDUCTION:
+        bad.append(f"spot_heavy migration reduction "
+                   f"{spot['migration_reduction']:.1%} < {MIN_REDUCTION:.0%}")
+    if spot["cost_gap"] > MAX_COST_GAP:
+        bad.append(f"spot_heavy cost gap {spot['cost_gap']:+.1%} "
+                   f"> {MAX_COST_GAP:.0%}")
+    for r in results:
+        if not r["frames_conserved"]:
+            bad.append(f"{r['scenario']}: ledger frame conservation violated")
+    if total_elapsed > TIME_BUDGET_S:
+        bad.append(f"suite took {total_elapsed:.1f}s > {TIME_BUDGET_S:.0f}s")
+    return bad
+
+
+def run() -> list[dict]:
+    """Harness entry (benchmarks/run.py): CSV rows with acceptance flags."""
+    t0 = time.perf_counter()
+    results = compare_all()
+    violations = check_acceptance(results, time.perf_counter() - t0)
+    rows = []
+    for r in results:
+        gated = r["scenario"] == "spot_heavy"
+        ok = (r["frames_conserved"]
+              and (not gated
+                   or (r["migration_reduction"] >= MIN_REDUCTION
+                       and r["cost_gap"] <= MAX_COST_GAP)))
+        rows.append({
+            "name": f"replan_churn_{r['scenario']}",
+            "us_per_call": r["elapsed_s"] * 1e6,
+            "derived": (f"migr {r['ffd']['migrations']}->"
+                        f"{r['repair']['migrations']} "
+                        f"({r['migration_reduction']:.0%} fewer) "
+                        f"cost gap {r['cost_gap']:+.1%} "
+                        f"SLO {r['slo_delta']:+.4f} "
+                        f"defrags {r['defrags']}"),
+            "match_paper": ok if gated else None,
+        })
+    rows.append({
+        "name": "replan_churn_acceptance",
+        "us_per_call": (time.perf_counter() - t0) * 1e6,
+        "derived": "all bars met" if not violations else "; ".join(violations),
+        "match_paper": not violations,
+    })
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the acceptance comparison and exit non-zero "
+                         "on any violated bar (CI gate)")
+    ap.add_argument("--out", default=None,
+                    help="write the summary JSON here")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    results = compare_all()
+    total_elapsed = time.perf_counter() - t0
+    violations = check_acceptance(results, total_elapsed)
+
+    for r in results:
+        print(f"{r['scenario']:14s} migrations {r['ffd']['migrations']:5d} -> "
+              f"{r['repair']['migrations']:5d} "
+              f"({r['migration_reduction']:.1%} fewer)  "
+              f"cost {r['ffd']['total_cost']:.2f} -> "
+              f"{r['repair']['total_cost']:.2f} ({r['cost_gap']:+.1%})  "
+              f"SLO {r['slo_delta']:+.4f}  defrags {r['defrags']}  "
+              f"conserved={r['frames_conserved']}  [{r['elapsed_s']}s]")
+
+    summary = {"results": results, "violations": violations,
+               "elapsed_s": round(total_elapsed, 2),
+               "bars": {"min_migration_reduction": MIN_REDUCTION,
+                        "max_cost_gap": MAX_COST_GAP,
+                        "time_budget_s": TIME_BUDGET_S}}
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+        print(f"summary written to {args.out}")
+
+    if violations:
+        print("ACCEPTANCE " + ("FAILED" if args.smoke else "bars violated")
+              + ":\n  " + "\n  ".join(violations))
+        # only --smoke (the CI gate) turns violations into a failing exit;
+        # a plain run is informational
+        return 1 if args.smoke else 0
+    print(f"acceptance ok in {total_elapsed:.1f}s "
+          f"(budget {TIME_BUDGET_S:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

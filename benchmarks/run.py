@@ -34,6 +34,8 @@ _SUITES: list[tuple[str, str, str]] = [
     ("continuous", "continuous vs static batching (beyond-paper)",
      "continuous_vs_static"),
     ("fleet_sim", "fleet simulator (beyond-paper)", "fleet_sim"),
+    ("replan_churn", "replan churn: REPAIR vs FFD full replan (beyond-paper)",
+     "replan_churn"),
     ("kernels", "pallas kernels (interpret-mode validation)",
      "kernel_sweep"),
 ]

@@ -14,6 +14,9 @@ from repro.core.catalog import (Catalog, InstanceType, UTILIZATION_CAP,
 from repro.core.manager import ResourceManager
 from repro.core.packing import (Bin, Choice, Infeasible, Item, Problem,
                                 Solution, validate)
+from repro.core.repair import (RepairConfig, RepairResult,
+                               count_plan_migrations, plan_assignment,
+                               repair_plan)
 from repro.core.strategies import Plan, STRATEGIES, build_problem
 from repro.core.workload import (FIG3_SCENARIOS, PROGRAMS, VGG16, ZF,
                                  AnalysisProgram, Stream, make_streams)
@@ -21,7 +24,9 @@ from repro.core.workload import (FIG3_SCENARIOS, PROGRAMS, VGG16, ZF,
 __all__ = [
     "AdaptiveManager", "AnalysisProgram", "Bin", "Catalog", "Choice",
     "FIG3_SCENARIOS", "Infeasible", "InstanceType", "Item", "PROGRAMS",
-    "Plan", "Problem", "ResourceManager", "STRATEGIES", "Solution", "Stream",
-    "UTILIZATION_CAP", "VGG16", "ZF", "build_problem", "fig3_catalog",
-    "fig6_catalog", "make_streams", "table1_catalog", "validate",
+    "Plan", "Problem", "RepairConfig", "RepairResult", "ResourceManager",
+    "STRATEGIES", "Solution", "Stream", "UTILIZATION_CAP", "VGG16", "ZF",
+    "build_problem", "count_plan_migrations", "fig3_catalog", "fig6_catalog",
+    "make_streams", "plan_assignment", "repair_plan", "table1_catalog",
+    "validate",
 ]

@@ -4,6 +4,15 @@ Demands vary (rush hour, content complexity). The adaptive manager monitors
 the demanded frame rates, re-solves when the current plan is infeasible or
 when re-solving would save enough to justify migration, and applies
 hysteresis so it does not thrash.
+
+Replans come in two flavors. A **full** re-solve hands the whole fleet back
+to the strategy (the default). **Repair** mode (``repair`` config, or
+``strategy="REPAIR"``) routes replans through the incremental repair planner
+instead: still-feasible placements stay put, only the delta — streams on
+preempted/overloaded bins, plus arrivals — is re-packed, and a defrag escape
+hatch falls back to a full plan when repaired cost drifts too far above a
+fresh one (see core/repair.py). The event trace records per-event migration
+counts and whether the defrag hatch fired.
 """
 from __future__ import annotations
 
@@ -13,6 +22,8 @@ from typing import Callable, Optional, Sequence
 from repro.core.catalog import Catalog
 from repro.core.manager import ResourceManager
 from repro.core.packing import Infeasible, fits
+from repro.core.repair import (RepairConfig, RepairResult,
+                               count_plan_migrations, repair_plan)
 from repro.core.strategies import Plan
 from repro.core.workload import Stream
 
@@ -23,6 +34,7 @@ class AdaptiveEvent:
     action: str            # "keep" | "replan" | "forced-replan"
     hourly_cost: float
     migrations: int
+    defrag: bool = False   # repair mode: the full-replan escape hatch fired
 
 
 # A replan trigger decides whether a *still-feasible* plan should even be
@@ -45,6 +57,14 @@ class AdaptiveManager:
     only at chosen hours; the default always evaluates). Infeasibility — or
     ``step(force=True)``, used by the fleet simulator to replay streams off
     preempted instances — bypasses the trigger.
+
+    ``repair`` (or ``strategy="REPAIR"``) switches *replanning* to the
+    min-migration repair planner; the config carries the migration budget
+    and the defrag ratio. The first placement still uses the configured
+    strategy (with no previous plan there is nothing to repair; the REPAIR
+    strategy itself degrades to fresh FFD). Like FFD, the repair planner
+    packs at each stream's own rate — ``target_fps`` does not apply to
+    repaired replans.
     """
 
     manager: ResourceManager
@@ -52,9 +72,18 @@ class AdaptiveManager:
     savings_threshold: float = 0.10
     target_fps: Optional[float] = None
     replan_trigger: Optional[ReplanTrigger] = None
+    repair: Optional[RepairConfig] = None
 
     current: Optional[Plan] = None
     events: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.strategy == "REPAIR" and self.repair is None:
+            self.repair = RepairConfig()
+
+    @property
+    def repair_mode(self) -> bool:
+        return self.repair is not None or self.strategy == "REPAIR"
 
     def history(self) -> tuple[AdaptiveEvent, ...]:
         """The decision trace so far (immutable view for ledgers/reports)."""
@@ -90,6 +119,18 @@ class AdaptiveManager:
                 used = [u + r for u, r in zip(used, req)]
         return True
 
+    def _candidate(self, streams: Sequence[Stream]) -> tuple[Plan, int, bool]:
+        """(candidate plan, migrations it would perform, defrag?)."""
+        if self.repair_mode:
+            res: RepairResult = repair_plan(
+                streams, self.manager.catalog, previous=self.current,
+                config=self.repair or RepairConfig())
+            return res.plan, res.migrations, res.defrag
+        candidate = self.manager.plan(streams, self.strategy, self.target_fps)
+        migrations = (0 if self.current is None
+                      else _count_migrations(self.current, candidate))
+        return candidate, migrations, False
+
     def step(self, t: int, streams: Sequence[Stream], *,
              force: bool = False) -> Plan:
         """One control-loop tick with the current demanded streams.
@@ -98,9 +139,15 @@ class AdaptiveManager:
         capacity (e.g. an instance it relies on was spot-preempted).
         """
         if self.current is None:
-            self.current = self.manager.plan(streams, self.strategy, self.target_fps)
-            self.events.append(AdaptiveEvent(t, "replan", self.current.hourly_cost,
-                                             migrations=len(streams)))
+            # first placement goes through the configured strategy — repair
+            # mode only changes how *replans* are computed (with no previous
+            # plan there is nothing to repair anyway)
+            self.current = self.manager.plan(streams, self.strategy,
+                                             self.target_fps)
+            # every stream is an arrival, nothing migrates
+            self.events.append(AdaptiveEvent(t, "replan",
+                                             self.current.hourly_cost,
+                                             migrations=0))
             return self.current
 
         feasible = (not force) and self._plan_feasible_for(self.current, streams)
@@ -109,17 +156,16 @@ class AdaptiveManager:
             self.events.append(AdaptiveEvent(t, "keep",
                                              self.current.hourly_cost, 0))
             return self.current
-        candidate = self.manager.plan(streams, self.strategy, self.target_fps)
+        candidate, migrations, defrag = self._candidate(streams)
         if not feasible:
-            migrations = _count_migrations(self.current, candidate)
             self.current = candidate
             self.events.append(AdaptiveEvent(t, "forced-replan",
-                                             candidate.hourly_cost, migrations))
+                                             candidate.hourly_cost, migrations,
+                                             defrag=defrag))
         elif candidate.hourly_cost < self.current.hourly_cost * (1 - self.savings_threshold):
-            migrations = _count_migrations(self.current, candidate)
             self.current = candidate
             self.events.append(AdaptiveEvent(t, "replan", candidate.hourly_cost,
-                                             migrations))
+                                             migrations, defrag=defrag))
         else:
             self.events.append(AdaptiveEvent(t, "keep", self.current.hourly_cost, 0))
         return self.current
@@ -128,14 +174,21 @@ class AdaptiveManager:
         """Integrated cost over all ticks (1 tick = 1 hour)."""
         return sum(e.hourly_cost for e in self.events)
 
+    def total_migrations(self) -> int:
+        return sum(e.migrations for e in self.events)
+
+    def defrags(self) -> int:
+        return sum(1 for e in self.events if e.defrag)
+
 
 def _count_migrations(old: Plan, new: Plan) -> int:
-    def assignment(plan: Plan) -> dict[str, str]:
-        out = {}
-        for b in plan.solution.bins:
-            ch = plan.problem.choices[b.choice]
-            for i in b.items:
-                out[plan.problem.items[i].key] = ch.key
-        return out
-    a, b = assignment(old), assignment(new)
-    return sum(1 for k in b if a.get(k) != b[k])
+    """Streams that *moved* between plans. A newly arrived stream has no
+    prior placement — placing it is a boot, not a migration — and a departed
+    stream migrates nowhere either. Delegates to the ordinal-aware plan
+    diff, which sees moves between two instances of one (type, location)
+    but can over-count when a bin's position shifts within its key: a full
+    re-solve has no bin identity to track, so this is an upper bound on the
+    moves the cluster's sticky reconcile will actually perform. Repair-mode
+    events carry exact counts (origin-tracked); the simulation ledger's
+    per-tick physical count is the unbiased metric for comparing the two."""
+    return count_plan_migrations(old, new)

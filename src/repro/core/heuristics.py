@@ -47,16 +47,15 @@ def _cost_efficiency(problem: Problem, choice_idx: int, remaining_items: list[in
     return ch.price / count
 
 
-def first_fit_decreasing(problem: Problem) -> Solution:
-    """FFD over items; for each item try open bins, else open the bin whose
-    price-per-held-items is lowest among compatible choices."""
-    order = sorted(range(len(problem.items)),
-                   key=lambda i: _norm_size(problem, problem.items[i]),
+def ffd_pack_into(problem: Problem, bins: list[Bin],
+                  bin_used: list[list[float]], items) -> None:
+    """First-fit the given item indices (decreasing norm-size order) into
+    ``bins``/``bin_used`` (mutated in place; new bins append), opening a new
+    bin by the lowest price-per-held-items rule when nothing fits. Shared by
+    :func:`first_fit_decreasing` (empty seed) and the repair planner's delta
+    pass (seeded with the kept bins, so residual capacity fills first)."""
+    order = sorted(items, key=lambda i: _norm_size(problem, problem.items[i]),
                    reverse=True)
-    bins: list[Bin] = []
-    bin_used: list[list[float]] = []
-    cost = 0.0
-    remaining = list(order)
     for pos, i in enumerate(order):
         item = problem.items[i]
         placed = False
@@ -71,7 +70,7 @@ def first_fit_decreasing(problem: Problem) -> Solution:
                 placed = True
                 break
         if not placed:
-            rest = remaining[pos:]
+            rest = order[pos:]
             cands = item.compatible()
             if not cands:
                 raise Infeasible(f"item {item.key} has no compatible choice")
@@ -79,11 +78,17 @@ def first_fit_decreasing(problem: Problem) -> Solution:
                                           problem.choices[c].price))
             if _cost_efficiency(problem, c, rest) == float("inf"):
                 raise Infeasible(f"item {item.key} fits no empty instance")
-            b = Bin(choice=c, items=[i])
-            req = item.requirements[c]
-            bins.append(b)
-            bin_used.append(list(req))
-            cost += problem.choices[c].price
+            bins.append(Bin(choice=c, items=[i]))
+            bin_used.append(list(item.requirements[c]))
+
+
+def first_fit_decreasing(problem: Problem) -> Solution:
+    """FFD over items; for each item try open bins, else open the bin whose
+    price-per-held-items is lowest among compatible choices."""
+    bins: list[Bin] = []
+    bin_used: list[list[float]] = []
+    ffd_pack_into(problem, bins, bin_used, range(len(problem.items)))
+    cost = sum(problem.choices[b.choice].price for b in bins)
     return Solution(bins=bins, cost=cost, optimal=False, note="ffd")
 
 

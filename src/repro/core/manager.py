@@ -22,13 +22,17 @@ class ResourceManager:
     default_strategy: str = "ST3"
 
     def plan(self, streams: Sequence[Stream], strategy: Optional[str] = None,
-             target_fps: Optional[float] = None) -> Plan:
+             target_fps: Optional[float] = None,
+             previous: Optional[Plan] = None) -> Plan:
         name = strategy or self.default_strategy
         fn = strategies.STRATEGIES[name]
         if name in ("NL", "ARMVAC", "ARMVAC+", "GCL"):
             if target_fps is None:
                 raise ValueError(f"{name} requires target_fps")
             return fn(streams, self.catalog, target_fps)
+        if name == "REPAIR":
+            # incremental: the previous plan is planner state, not a hint
+            return fn(streams, self.catalog, previous=previous)
         return fn(streams, self.catalog)
 
     def plan_or_fail(self, streams: Sequence[Stream], strategy: str,

@@ -24,6 +24,7 @@ class Choice:
     location: str
     capacity: tuple[float, ...]   # usable capacity (90%-capped)
     price: float
+    has_gpu: bool = False         # carried from the catalog's InstanceType
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +77,13 @@ class Bin:
                 tot[k] += r[k]
         return tuple(tot)
 
+    def residual(self, problem: Problem) -> tuple[float, ...]:
+        """Capacity left in this bin (per dimension): what the repair
+        planner's delta pass fills before opening new instances. Never
+        negative (beyond float noise) in a valid solution."""
+        cap = problem.choices[self.choice].capacity
+        return tuple(c - u for c, u in zip(cap, self.used(problem)))
+
 
 @dataclasses.dataclass
 class Solution:
@@ -122,3 +130,8 @@ def validate(problem: Problem, sol: Solution) -> None:
 
 def fits(req: Sequence[float], used: Sequence[float], cap: Sequence[float]) -> bool:
     return all(u + r <= c + EPS for r, u, c in zip(req, used, cap))
+
+
+def residuals(problem: Problem, bins: Sequence[Bin]) -> list[tuple[float, ...]]:
+    """Residual capacity vector of every bin, in bin order."""
+    return [b.residual(problem) for b in bins]

@@ -57,9 +57,12 @@ class Plan:
 
 
 def _key_is_gpu(problem: Problem, key: str) -> bool:
+    """GPU-ness comes from the catalog's ``InstanceType.has_gpu``, carried on
+    each Choice by build_problem — a name-prefix heuristic misclassifies any
+    CPU type that happens to start with "g"/"p"/"NC" (and vice versa)."""
     for c in problem.choices:
         if c.key == key:
-            return "gpu" in c.type_name.lower() or c.type_name.startswith(("g", "p", "NC"))
+            return c.has_gpu
     return False
 
 
@@ -85,7 +88,8 @@ def build_problem(streams: Sequence[Stream], catalog: Catalog,
                 continue
             choices.append(Choice(
                 key=f"{t.name}@{loc}", type_name=t.name, location=loc,
-                capacity=t.usable(UTILIZATION_CAP), price=price))
+                capacity=t.usable(UTILIZATION_CAP), price=price,
+                has_gpu=t.has_gpu))
             metas.append((t, loc))
     if not choices:
         raise Infeasible("catalog empty after strategy filters")
@@ -222,8 +226,20 @@ def ffd_greedy(streams: Sequence[Stream], catalog: Catalog) -> Plan:
     return Plan(sol, problem, "FFD")
 
 
+def repair_incremental(streams: Sequence[Stream], catalog: Catalog,
+                       previous=None, config=None) -> Plan:
+    """REPAIR (BEYOND-PAPER): min-migration incremental replanning. Keeps
+    every still-feasible placement of ``previous`` in place, evicts only
+    streams on lost/overloaded bins, and FFD-packs just that delta over
+    residual capacity (see core/repair.py). With no previous plan it is a
+    fresh FFD."""
+    from repro.core.repair import RepairConfig, repair_plan
+    return repair_plan(streams, catalog, previous=previous,
+                       config=config or RepairConfig()).plan
+
+
 STRATEGIES: dict[str, Callable] = {
     "ST1": st1_cpu_only, "ST2": st2_gpu_only, "ST3": st3_multiple_choice,
     "NL": nearest_location, "ARMVAC": armvac, "ARMVAC+": armvac_plus, "GCL": gcl,
-    "FFD": ffd_greedy,
+    "FFD": ffd_greedy, "REPAIR": repair_incremental,
 }

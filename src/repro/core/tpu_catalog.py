@@ -139,7 +139,7 @@ def build_tpu_problem(streams: Sequence[LLMStream], catalog: Catalog,
             choices.append(Choice(key=f"{t.name}@{loc}", type_name=t.name,
                                   location=loc,
                                   capacity=t.usable(UTILIZATION_CAP),
-                                  price=price))
+                                  price=price, has_gpu=t.has_gpu))
             metas.append(t)
     items = []
     for s in streams:

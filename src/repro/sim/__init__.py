@@ -8,7 +8,8 @@ per-tick cost/SLO accounting calibrated from serving measurements
 (``ledger``), and a scenario library (``scenarios``). See DESIGN.md.
 """
 from repro.sim.autoscaler import (PredictiveEWMAPolicy, ReactivePolicy,
-                                  ScheduledPolicy, StaticPeakPolicy)
+                                  RepairPolicy, ScheduledPolicy,
+                                  StaticPeakPolicy)
 from repro.sim.cluster import Cluster, SimInstance, SpotMarket
 from repro.sim.demand import (CameraSpec, DiurnalFleet, FlashCrowd, MixShift,
                               PoissonChurn, peak_streams, rush_hour_fps)
@@ -20,8 +21,8 @@ from repro.sim.scenarios import SCENARIOS, Scenario
 __all__ = [
     "CameraSpec", "Cluster", "DiurnalFleet", "Event", "EventQueue",
     "FlashCrowd", "FleetSimulator", "Ledger", "MixShift", "PoissonChurn",
-    "PredictiveEWMAPolicy", "ReactivePolicy", "SCENARIOS", "Scenario",
-    "ScheduledPolicy", "ServiceCalibration", "SimConfig", "SimInstance",
+    "PredictiveEWMAPolicy", "ReactivePolicy", "RepairPolicy", "SCENARIOS",
+    "Scenario", "ScheduledPolicy", "ServiceCalibration", "SimConfig", "SimInstance",
     "SpotMarket", "StaticPeakPolicy", "TickRecord", "peak_streams",
     "rush_hour_fps",
 ]

@@ -15,6 +15,9 @@ for the demand we see right now?* All of them delegate the actual packing to
 * ``PredictiveEWMAPolicy`` — plans for an EWMA-extrapolated forecast of
   each stream's rate, so capacity boots *before* the ramp arrives instead
   of after it (trading a little cost for boot-window SLO).
+* ``RepairPolicy`` — reactive, but replans run through the min-migration
+  repair planner (``core/repair.py``): feasible placements stay put, only
+  the delta re-packs, and a defrag escape hatch bounds the cost drift.
 
 A spot preemption reaches a policy as ``decide(..., preempted=True)``; the
 adaptive policies force a replan, which replays the orphaned streams onto
@@ -27,6 +30,7 @@ from typing import Optional, Sequence
 
 from repro.core.adaptive import AdaptiveManager
 from repro.core.manager import ResourceManager
+from repro.core.repair import RepairConfig
 from repro.core.strategies import Plan
 from repro.core.workload import Stream
 
@@ -63,6 +67,27 @@ class ReactivePolicy:
     def decide(self, t: float, streams: Sequence[Stream], *,
                preempted: bool = False) -> Plan:
         return self.adaptive.step(t, streams, force=preempted)
+
+
+class RepairPolicy(ReactivePolicy):
+    """Reactive control loop whose replans are min-migration repairs.
+
+    Preemption replays and demand-growth replans keep every still-feasible
+    placement and re-pack only the orphaned/overflowing delta; cost drift is
+    bounded by the defrag escape hatch (adopt a fresh FFD plan when repaired
+    cost reaches ``defrag_ratio`` x the fresh cost). ``migration_budget``
+    additionally lets each repair spend leftover moves on consolidation.
+    """
+
+    def __init__(self, manager: ResourceManager,
+                 savings_threshold: float = 0.10,
+                 migration_budget: Optional[int] = None,
+                 defrag_ratio: Optional[float] = 1.25,
+                 name: str = "repair") -> None:
+        super().__init__(manager, strategy="REPAIR",
+                         savings_threshold=savings_threshold, name=name)
+        self.adaptive.repair = RepairConfig(migration_budget=migration_budget,
+                                            defrag_ratio=defrag_ratio)
 
 
 class ScheduledPolicy(ReactivePolicy):

@@ -55,7 +55,11 @@ class SpotMarket:
 
     ``multiplier(region)`` is the current spot/on-demand price ratio. The
     walk is seeded, so the whole price history is a pure function of the
-    seed — two runs of a scenario see identical markets.
+    seed — two runs of a scenario see identical markets. The walk and the
+    preemption draws use *separate* generators: the market is exogenous, so
+    the price history must not depend on how many instances a policy happens
+    to hold (otherwise two policies under one seed would face different
+    prices and their ledgers would not be comparable).
     """
 
     def __init__(self, regions: Iterable[str], *, discount: float = 0.35,
@@ -66,6 +70,7 @@ class SpotMarket:
         self.hazard_per_h = hazard_per_h
         self._walk = {r: 1.0 for r in sorted(regions)}
         self._rng = np.random.default_rng(seed)
+        self._preempt_rng = np.random.default_rng(seed + 7919)
 
     def multiplier(self, region: str) -> float:
         return self.discount * self._walk.get(region, 1.0)
@@ -91,8 +96,8 @@ class SpotMarket:
         for inst in spot_instances:
             hazard = self.hazard_per_h * self._walk.get(inst.location, 1.0)
             p = 1.0 - math.exp(-hazard * dt_h)
-            if self._rng.random() < p:
-                out.append((t + float(self._rng.uniform(0.0, dt_h)),
+            if self._preempt_rng.random() < p:
+                out.append((t + float(self._preempt_rng.uniform(0.0, dt_h)),
                             inst.instance_id))
         return out
 
@@ -107,6 +112,7 @@ class Cluster:
         self.instances: dict[str, SimInstance] = {}
         self._counter = 0
         self._rng = np.random.default_rng(seed)
+        self._prev_assignment: dict[str, str] = {}   # stream_id -> instance_id
 
     # -- queries -------------------------------------------------------------
 
@@ -147,13 +153,16 @@ class Cluster:
                   drain_h: float = 0.0) -> dict[str, str]:
         """Make the physical fleet match the plan; map streams to instances.
 
-        Bins are matched to live instances of the same (type, location)
-        choice oldest-first, so long-running instances keep their streams and
-        scale-down retires the newest rentals. Missing instances boot now
-        (ready after the boot delay); surplus ones drain for ``drain_h``
-        before terminating (make-before-break: the old placement keeps
-        serving while replacements boot — billed, like any lame-duck VM).
-        Returns ``{stream_id: instance_id}`` for the ledger's accounting.
+        Matching is *sticky*: a bin goes to the live instance of its (type,
+        location) choice that already hosts the most of its streams (by the
+        previous reconcile's assignment), so stable plans produce stable
+        placements — a single preemption no longer shifts every later bin of
+        that key onto a different machine. Bins and instances left unmatched
+        pair up oldest-first, so scale-down still retires the newest rentals.
+        Missing instances boot now (ready after the boot delay); surplus ones
+        drain for ``drain_h`` before terminating (make-before-break: the old
+        placement keeps serving while replacements boot — billed, like any
+        lame-duck VM). Returns ``{stream_id: instance_id}`` for the ledger.
         """
         by_key: dict[str, list] = {}
         for b in plan.solution.bins:
@@ -171,20 +180,43 @@ class Cluster:
         for key in sorted(by_key):
             bins = by_key[key]
             have = live_by_key.get(key, [])
+            # vote: how many of each bin's streams already live on each
+            # candidate instance (per the previous assignment)?
+            votes: list[tuple[int, int, int]] = []      # (-count, bin#, inst#)
+            for n, (b, _) in enumerate(bins):
+                tally: dict[str, int] = {}
+                for i in b.items:
+                    iid = self._prev_assignment.get(plan.problem.items[i].key)
+                    if iid is not None:
+                        tally[iid] = tally.get(iid, 0) + 1
+                for m, inst in enumerate(have):
+                    c = tally.get(inst.instance_id, 0)
+                    if c > 0:
+                        votes.append((-c, n, m))
+            votes.sort()
+            matched_bin: dict[int, SimInstance] = {}
+            taken: set[int] = set()
+            for negc, n, m in votes:
+                if n in matched_bin or m in taken:
+                    continue
+                matched_bin[n] = have[m]
+                taken.add(m)
+            # leftovers pair oldest-first, then boot
+            free = [inst for m, inst in enumerate(have) if m not in taken]
             for n, (b, ch) in enumerate(bins):
-                if n < len(have):
-                    inst = have[n]
-                else:
-                    inst = self._boot(t, ch.key, ch.type_name, ch.location,
-                                      ch.price)
+                inst = matched_bin.get(n)
+                if inst is None:
+                    inst = free.pop(0) if free else self._boot(
+                        t, ch.key, ch.type_name, ch.location, ch.price)
                 for i in b.items:
                     assignment[plan.problem.items[i].key] = inst.instance_id
-            for extra in have[len(bins):]:
+            for extra in free:
                 self.terminate(extra.instance_id, t + drain_h)
         for key, insts in live_by_key.items():
             if key not in by_key:
                 for inst in insts:
                     self.terminate(inst.instance_id, t + drain_h)
+        self._prev_assignment = assignment
         return assignment
 
     # -- capacity / billing --------------------------------------------------

@@ -77,6 +77,11 @@ class FleetSimulator:
         preempted_since_decide = 0
         preemptions_this_interval = 0
         migrations_this_interval = 0
+        defrags_this_interval = 0
+        # adaptive policies expose their decision trace; the ledger records
+        # when the repair planner's defrag escape hatch fired
+        adaptive = getattr(self.policy, "adaptive", None)
+        events_seen = 0
 
         while q:
             e = q.pop()
@@ -97,7 +102,8 @@ class FleetSimulator:
                 self._account(prev_t, t, current_streams, assignment,
                               prev_assignment, prev_fps,
                               preemptions_this_interval,
-                              migrations_this_interval)
+                              migrations_this_interval,
+                              defrags_this_interval)
                 preemptions_this_interval = 0
                 prev_t = t
             if e.kind == ev.END:
@@ -109,15 +115,24 @@ class FleetSimulator:
             plan = self.policy.decide(t, current_streams,
                                       preempted=preempted_since_decide > 0)
             preempted_since_decide = 0
+            if adaptive is not None:
+                new_events = adaptive.events[events_seen:]
+                events_seen = len(adaptive.events)
+                defrags_this_interval = sum(
+                    1 for e in new_events if getattr(e, "defrag", False))
+            else:
+                defrags_this_interval = 0
             assignment = self.cluster.reconcile(t, plan,
                                                 drain_h=cfg.boot_delay_h)
             # physical migrations: streams whose instance changed, including
             # preemption replays that a plan-level diff cannot see (the new
             # plan may be structurally identical while the orphaned streams
-            # land on freshly booted replacements)
+            # land on freshly booted replacements). A stream with no previous
+            # instance is an arrival — its first placement is a boot, not a
+            # migration.
             migrations_this_interval = sum(
                 1 for sid, iid in assignment.items()
-                if prev_assignment.get(sid) != iid)
+                if sid in prev_assignment and prev_assignment[sid] != iid)
 
             self.market.step(cfg.dt_h)
             if cfg.spot_fraction > 0:
@@ -128,7 +143,7 @@ class FleetSimulator:
 
     def _account(self, t0: float, t1: float, streams, assignment,
                  prev_assignment, prev_fps, preemptions: int,
-                 migrations: int) -> None:
+                 migrations: int, defrags: int = 0) -> None:
         """Frames and dollars for [t0, t1).
 
         While a stream's planned instance is still booting, its *previous*
@@ -164,4 +179,5 @@ class FleetSimulator:
             frames_analyzed=analyzed, frames_dropped=demanded - analyzed,
             migrations=migrations, preemptions=preemptions,
             instances_live=len(self.cluster.live()), streams=len(streams),
+            defrags=defrags,
         ), hours)

@@ -66,6 +66,7 @@ class TickRecord:
     preemptions: int
     instances_live: int
     streams: int
+    defrags: int = 0              # repair-mode full-replan escape hatches
 
 
 class Ledger:
@@ -114,6 +115,10 @@ class Ledger:
     def preemptions(self) -> int:
         return sum(r.preemptions for r in self.records)
 
+    @property
+    def defrags(self) -> int:
+        return sum(r.defrags for r in self.records)
+
     def slo_attainment(self) -> float:
         """Fraction of demanded frames actually analyzed on time."""
         d = self.frames_demanded
@@ -131,6 +136,7 @@ class Ledger:
             "slo_attainment": round(self.slo_attainment(), 6),
             "migrations": self.migrations,
             "preemptions": self.preemptions,
+            "defrags": self.defrags,
             "instance_hours": {"/".join(k): round(v, 6)
                                for k, v in sorted(self.instance_hours.items())},
         }

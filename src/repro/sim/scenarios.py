@@ -15,6 +15,10 @@ overrides (stream count, duration, seed) for scaling studies.
                           cheap, but preemptions keep replaying streams.
 * ``flash_crowd``       — steady fleet with Poisson camera churn and an
                           8x two-hour demand spike on European cameras.
+* ``churn_storm``       — rush hour with Poisson camera churn *and* most
+                          capacity on spot: every forced-replan source at
+                          once (arrivals, departures, preemptions) — the
+                          stress test for min-migration repair planning.
 """
 from __future__ import annotations
 
@@ -130,10 +134,27 @@ def flash_crowd(n_streams: int = 36, duration_h: float = 24.0,
         description="camera churn plus an 8x two-hour European demand spike")
 
 
+def churn_storm(n_streams: int = 72, duration_h: float = 24.0,
+                seed: int = 0) -> Scenario:
+    base = DiurnalFleet(_fleet(US_CAMERAS, n_streams, zf_peak=4.0))
+    churned = PoissonChurn(base, templates=_fleet(US_CAMERAS, 12,
+                                                  zf_base=0.3, zf_peak=2.0),
+                           rate_per_h=1.0, mean_lifetime_h=4.0,
+                           horizon_h=duration_h, seed=seed + 13)
+    return Scenario(
+        name="churn_storm",
+        demand=churned,
+        config=SimConfig(duration_h=duration_h, seed=seed,
+                         spot_fraction=0.6, preempt_hazard_per_h=0.10),
+        description="camera churn + spot preemptions: every forced-replan "
+                    "source at once (min-migration stress test)")
+
+
 SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "steady": steady,
     "rush_hour": rush_hour,
     "follow_the_sun": follow_the_sun,
     "spot_heavy": spot_heavy,
     "flash_crowd": flash_crowd,
+    "churn_storm": churn_storm,
 }

@@ -1,4 +1,6 @@
 """Adaptive runtime management [6,14]: rush-hour demand swings."""
+import pytest
+
 from repro.core import (AdaptiveManager, ResourceManager, Stream,
                         fig3_catalog)
 from repro.core.workload import PROGRAMS
@@ -79,10 +81,14 @@ def test_count_migrations():
     assert _count_migrations(old, _mini_plan({"a": 0, "b": 1, "c": 1})) == 1
     # everything moves
     assert _count_migrations(old, _mini_plan({"a": 1, "b": 1, "c": 0})) == 3
-    # a brand-new stream counts as a migration (it must be placed)
+    # a brand-new stream is an arrival, not a migration: it has no prior
+    # placement, so placing it is a boot — nothing physically moves
     assert _count_migrations(
-        old, _mini_plan({"a": 0, "b": 0, "c": 1, "d": 0})) == 1
-    # a departed stream does not
+        old, _mini_plan({"a": 0, "b": 0, "c": 1, "d": 0})) == 0
+    # ...and an arrival alongside a real move counts exactly the move
+    assert _count_migrations(
+        old, _mini_plan({"a": 0, "b": 1, "c": 1, "d": 0})) == 1
+    # a departed stream does not migrate either
     assert _count_migrations(old, _mini_plan({"a": 0, "b": 0})) == 0
 
 
@@ -112,3 +118,84 @@ def test_forced_replan_restores_feasibility():
     assert mgr.events[1].action == "forced-replan"
     assert mgr.events[1].migrations > 0
     assert mgr._plan_feasible_for(plan, spike)
+
+
+# -- _plan_feasible_for edge cases -------------------------------------------
+
+def test_plan_feasible_for_ignores_departed_streams():
+    """A departed stream leaves spare capacity behind; the plan stays
+    feasible for the survivors and the manager keeps it."""
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="ST3")
+    plan = mgr.step(0, make_streams(1.0))
+    survivors = make_streams(1.0)[:2]
+    assert mgr._plan_feasible_for(plan, survivors)
+    assert mgr.step(1, survivors) is plan
+    assert mgr.events[1].action == "keep"
+
+
+def test_plan_feasible_for_requirement_none_mid_plan():
+    """A stream whose new rate no longer fits its instance type at all
+    (requirement_for returns None) makes the plan infeasible: ZF at 8 fps
+    needs 57.6 cores — no CPU instance can run it."""
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="ST1")
+    plan = mgr.step(0, make_streams(0.4))     # ST1 places on CPU instances
+    hot = make_streams(8.0)
+    assert not mgr._plan_feasible_for(plan, hot)
+
+
+def test_plan_feasible_for_capacity_overflow_mid_plan():
+    """Rates that still *individually* fit the type but overflow the shared
+    bin make the plan infeasible (fits() fails, not requirement None)."""
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="ST3")
+    plan = mgr.step(0, make_streams(0.2))
+    warm = make_streams(0.9)                  # each fits alone; sum does not
+    if mgr._plan_feasible_for(plan, warm):
+        pytest.skip("packing left enough head-room; not an overflow case")
+    mgr.step(1, warm)
+    assert mgr.events[1].action == "forced-replan"
+
+
+def test_plan_feasible_for_unplaced_stream_and_force_flag():
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="ST3")
+    plan = mgr.step(0, make_streams(0.2))
+    # a stream the plan never placed -> infeasible (churn arrival)
+    arrived = make_streams(0.2) + [Stream("newcam", PROGRAMS["ZF"], fps=0.2)]
+    assert not mgr._plan_feasible_for(plan, arrived)
+    # force=True bypasses the feasibility check entirely: same demand, yet
+    # the step is a forced replan (spot preemption replay path)
+    same = make_streams(0.2)
+    assert mgr._plan_feasible_for(plan, same)
+    mgr.step(1, same, force=True)
+    assert mgr.events[1].action == "forced-replan"
+
+
+# -- repair mode -------------------------------------------------------------
+
+def test_repair_mode_keeps_placements_on_forced_replan():
+    """strategy="REPAIR": a forced replan with unchanged demand is a no-op
+    placement-wise — zero migrations, same assignment."""
+    from repro.core import plan_assignment
+
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="REPAIR")
+    streams = make_streams(1.0)
+    plan = mgr.step(0, streams)
+    before = plan_assignment(plan)
+    after = mgr.step(1, make_streams(1.0), force=True)
+    assert mgr.events[1].action == "forced-replan"
+    assert mgr.events[1].migrations == 0
+    assert not mgr.events[1].defrag
+    assert plan_assignment(after) == before
+
+
+def test_repair_mode_records_defrag_event():
+    from repro.core import RepairConfig
+
+    mgr = AdaptiveManager(ResourceManager(fig3_catalog()), strategy="REPAIR",
+                          repair=RepairConfig(defrag_ratio=1.0))
+    mgr.step(0, make_streams(6.0))
+    # demand collapse: repaired cost >= fresh cost -> the hatch fires
+    mgr.step(1, make_streams(0.2), force=True)
+    assert mgr.events[1].action == "forced-replan"
+    assert mgr.events[1].defrag
+    assert mgr.defrags() == 1
+    assert mgr.total_migrations() == mgr.events[1].migrations

@@ -67,6 +67,30 @@ def test_headline_over_50_percent(manager):
     assert 1 - st3 / st1 > 0.50
 
 
+def test_summary_gpu_classification_uses_catalog_not_names():
+    """Regression: _key_is_gpu must read the catalog's has_gpu flag. The old
+    name-prefix heuristic (startswith("g"/"p"/"NC")) called a CPU type named
+    "granite.2xl" a GPU and a GPU type named "accel.xl" a CPU."""
+    from repro.core import Catalog, InstanceType, Stream
+    from repro.core.workload import PROGRAMS
+
+    adversarial = Catalog(types=(
+        InstanceType("granite.2xl", (8.0, 15.0, 0.0, 0.0),
+                     {"us-east-1": 0.419}, has_gpu=False),
+        InstanceType("accel.xl", (8.0, 15.0, 1.0, 4.0),
+                     {"us-east-1": 0.650}, has_gpu=True),
+    ))
+    mgr = ResourceManager(adversarial)
+    # the ZF stream at 8 fps only fits the GPU type; the VGG16 stream no
+    # longer fits that instance's remaining GPU memory, and a CPU instance
+    # is cheaper than opening a second GPU — the optimal plan uses one each
+    streams = [Stream("cpu-cam", PROGRAMS["VGG16"], fps=0.4),
+               Stream("gpu-cam", PROGRAMS["ZF"], fps=8.0)]
+    s = mgr.plan(streams, "ST3").summary()
+    assert s["gpu_instances"] == 1
+    assert s["non_gpu_instances"] == 1
+
+
 def test_gpu_speedup_claims():
     """GPU accelerates up to ~16x at high frame rates; <5% at the lowest."""
     from repro.core.workload import ZF, VGG16

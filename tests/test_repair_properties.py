@@ -1,0 +1,271 @@
+"""Property tests for the min-migration repair planner (core/repair.py).
+
+``hypothesis`` is optional (see DESIGN.md, Testing): when missing, seeded
+random fleets below exercise the same invariants. For random fleets, churn
+(arrivals, departures, fps drift) and preemption replays:
+
+* repair output is always a valid Plan (``validate`` passes) covering every
+  demanded stream — no stream is lost;
+* add-only churn moves nothing: arrivals are placed, placements stay put;
+* unaffected streams never move (only the perturbed bin's members may);
+* repair migrations never exceed the churn a full FFD replan would cause;
+* the defrag escape hatch reproduces the fresh FFD plan exactly.
+"""
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (RepairConfig, ResourceManager, Stream,
+                        count_plan_migrations, fig6_catalog, plan_assignment,
+                        repair_plan, validate)
+from repro.core import geo
+from repro.core.workload import PROGRAMS
+
+CAMERAS = tuple(sorted(geo.CAMERAS))
+CATALOG = fig6_catalog()
+
+
+def _random_fleet(rng, n: int) -> list[Stream]:
+    out = []
+    for i in range(n):
+        cam = CAMERAS[int(rng.integers(0, len(CAMERAS)))]
+        if rng.random() < 0.25:
+            fps = round(float(rng.uniform(0.1, 1.5)), 3)
+            out.append(Stream(f"vgg-{i}", PROGRAMS["VGG16"], fps, camera=cam))
+        else:
+            fps = round(float(rng.uniform(0.2, 6.0)), 3)
+            out.append(Stream(f"zf-{i}", PROGRAMS["ZF"], fps, camera=cam))
+    return out
+
+
+def _churn(rng, streams: list[Stream], *, drop_p: float, n_add: int,
+           drift_p: float) -> list[Stream]:
+    import dataclasses
+    out = []
+    for s in streams:
+        if rng.random() < drop_p:
+            continue                          # departure
+        if rng.random() < drift_p:            # demand drift
+            hi = 1.5 if s.program.name == "VGG16" else 6.0
+            fps = round(float(np.clip(s.fps * rng.uniform(0.5, 2.0),
+                                      0.1, hi)), 3)
+            s = dataclasses.replace(s, fps=fps)
+        out.append(s)
+    base = len(streams)
+    for j in range(n_add):
+        cam = CAMERAS[int(rng.integers(0, len(CAMERAS)))]
+        fps = round(float(rng.uniform(0.2, 4.0)), 3)
+        out.append(Stream(f"zf-new-{base + j}", PROGRAMS["ZF"], fps,
+                          camera=cam))
+    return out
+
+
+def _check_repair_invariants(seed: int, n: int, drop_p: float, n_add: int,
+                             drift_p: float) -> None:
+    rng = np.random.default_rng(seed)
+    old_streams = _random_fleet(rng, n)
+    old = repair_plan(old_streams, CATALOG).plan
+    validate(old.problem, old.solution)
+
+    new_streams = _churn(rng, old_streams, drop_p=drop_p, n_add=n_add,
+                         drift_p=drift_p)
+    if not new_streams:
+        return
+    res = repair_plan(new_streams, CATALOG, previous=old)
+
+    # valid plan, every stream covered, none lost
+    validate(res.plan.problem, res.plan.solution)
+    placed = {res.plan.problem.items[i].key
+              for b in res.plan.solution.bins for i in b.items}
+    assert placed == {s.stream_id for s in new_streams}
+
+    # no bin is packed past its capacity in any dimension
+    from repro.core.packing import residuals
+    for r in residuals(res.plan.problem, res.plan.solution.bins):
+        assert all(v >= -1e-6 for v in r)
+
+    # structural accounting: every stream is kept, evicted, or an arrival;
+    # migrations are the final per-stream diff, so an evicted stream packed
+    # back where it came from is not a move
+    assert res.kept + res.evicted + res.arrivals == len(new_streams)
+    assert res.migrations <= res.evicted + res.consolidated
+
+    # repair never churns more than a full FFD replan would
+    fresh = repair_plan(new_streams, CATALOG).plan
+    ffd_churn = count_plan_migrations(old, fresh)
+    assert res.migrations <= ffd_churn, \
+        f"repair moved {res.migrations} > full-FFD churn {ffd_churn}"
+
+
+def _check_add_only_moves_nothing(seed: int, n: int, n_add: int) -> None:
+    rng = np.random.default_rng(seed)
+    old_streams = _random_fleet(rng, n)
+    old = repair_plan(old_streams, CATALOG).plan
+    new_streams = _churn(rng, old_streams, drop_p=0.0, n_add=n_add,
+                         drift_p=0.0)
+    res = repair_plan(new_streams, CATALOG, previous=old)
+    assert res.migrations == 0 and res.evicted == 0
+    assert res.arrivals == n_add
+    before = plan_assignment(old)
+    after = plan_assignment(res.plan)
+    for s in old_streams:
+        assert after[s.stream_id] == before[s.stream_id], \
+            f"unaffected stream {s.stream_id} moved"
+
+
+def test_repair_invariants_seeded():
+    for seed in range(20):
+        _check_repair_invariants(seed, n=12 + seed % 9, drop_p=0.2,
+                                 n_add=3, drift_p=0.5)
+
+
+def test_add_only_churn_moves_nothing_seeded():
+    for seed in range(10):
+        _check_add_only_moves_nothing(seed, n=10 + seed, n_add=4)
+
+
+def test_unaffected_streams_never_move_on_single_overload():
+    """Grow one stream until its bin overflows: only members of that bin may
+    move; every stream in every other bin keeps its exact placement."""
+    import dataclasses
+    rng = np.random.default_rng(7)
+    streams = _random_fleet(rng, 18)
+    old = repair_plan(streams, CATALOG).plan
+    before = plan_assignment(old)
+    # pick a ZF stream sharing a bin with at least one other stream
+    by_bin = {}
+    for b in old.solution.bins:
+        keys = [old.problem.items[i].key for i in b.items]
+        for k in keys:
+            by_bin[k] = keys
+    victim = next(s for s in streams
+                  if s.program.name == "ZF" and len(by_bin[s.stream_id]) > 1)
+    bin_members = set(by_bin[victim.stream_id])
+    grown = [dataclasses.replace(s, fps=6.0) if s.stream_id == victim.stream_id
+             else s for s in streams]
+    res = repair_plan(grown, CATALOG, previous=old)
+    after = plan_assignment(res.plan)
+    for s in streams:
+        if s.stream_id not in bin_members:
+            assert after[s.stream_id] == before[s.stream_id], \
+                f"stream {s.stream_id} outside the overloaded bin moved"
+
+
+def test_departed_streams_release_capacity_and_bins():
+    rng = np.random.default_rng(3)
+    streams = _random_fleet(rng, 16)
+    old = repair_plan(streams, CATALOG).plan
+    survivors = streams[::2]
+    res = repair_plan(survivors, CATALOG, previous=old)
+    assert res.departures == len(streams) - len(survivors)
+    assert res.migrations == 0, "departures alone must not move survivors"
+    assert res.plan.hourly_cost <= old.hourly_cost + 1e-9
+    placed = {res.plan.problem.items[i].key
+              for b in res.plan.solution.bins for i in b.items}
+    assert placed == {s.stream_id for s in survivors}
+
+
+def test_emptied_bin_does_not_count_survivors_as_migrations():
+    """Regression: when departures empty a whole bin, the later bins of the
+    same choice key shift ordinal — but their streams stay on their
+    instances (sticky reconcile), so repair must report zero migrations."""
+    streams = [Stream(f"zf-{i}", PROGRAMS["ZF"], fps=5.0, camera="nyc")
+               for i in range(18)]
+    old = repair_plan(streams, CATALOG).plan
+    first_bin = old.solution.bins[0]
+    gone = {old.problem.items[i].key for i in first_bin.items}
+    assert len(old.solution.bins) > 1, "need several bins of one key"
+    survivors = [s for s in streams if s.stream_id not in gone]
+    res = repair_plan(survivors, CATALOG, previous=old)
+    assert res.departures == len(gone)
+    assert res.migrations == 0
+    assert res.plan.hourly_cost < old.hourly_cost
+
+
+def test_defrag_hatch_reproduces_fresh_ffd():
+    """defrag_ratio=1.0 forces the hatch whenever repair costs at least the
+    fresh plan — the result must be exactly the fresh FFD solution."""
+    rng = np.random.default_rng(11)
+    streams = _random_fleet(rng, 14)
+    old = repair_plan(streams, CATALOG).plan
+    shrunk = _churn(rng, streams, drop_p=0.5, n_add=0, drift_p=0.0)
+    if not shrunk:
+        shrunk = streams[:2]
+    res = repair_plan(shrunk, CATALOG, previous=old,
+                      config=RepairConfig(defrag_ratio=1.0))
+    fresh = repair_plan(shrunk, CATALOG).plan
+    assert res.defrag
+    assert res.plan.hourly_cost == pytest.approx(fresh.hourly_cost)
+    assert plan_assignment(res.plan) == plan_assignment(fresh)
+
+
+def test_migration_budget_caps_consolidation():
+    """After heavy departures the fleet is fragmented; consolidation spends
+    at most the budget and every move must reduce cost (bins close)."""
+    rng = np.random.default_rng(5)
+    streams = _random_fleet(rng, 24)
+    old = repair_plan(streams, CATALOG).plan
+    survivors = streams[::3]
+    free = repair_plan(survivors, CATALOG, previous=old)
+    for budget in (0, 2, 6, len(survivors)):
+        res = repair_plan(survivors, CATALOG, previous=old,
+                          config=RepairConfig(migration_budget=budget))
+        assert res.consolidated <= budget
+        assert res.migrations <= budget
+        assert res.plan.hourly_cost <= free.plan.hourly_cost + 1e-9, \
+            "consolidation must never cost more than not consolidating"
+
+
+def test_repair_strategy_entry_through_resource_manager():
+    """STRATEGIES["REPAIR"] plans fresh without a previous plan and repairs
+    incrementally when ResourceManager.plan forwards one."""
+    rng = np.random.default_rng(9)
+    streams = _random_fleet(rng, 10)
+    mgr = ResourceManager(CATALOG)
+    fresh = mgr.plan(streams, "REPAIR")
+    assert fresh.strategy == "REPAIR"
+    validate(fresh.problem, fresh.solution)
+    grown = streams + [Stream(f"zf-extra-{j}", PROGRAMS["ZF"], fps=1.0,
+                              camera=CAMERAS[j]) for j in range(3)]
+    repaired = mgr.plan(grown, "REPAIR", previous=fresh)
+    validate(repaired.problem, repaired.solution)
+    before, after = plan_assignment(fresh), plan_assignment(repaired)
+    assert all(after[s.stream_id] == before[s.stream_id] for s in streams)
+
+
+def test_repair_policy_survives_preemption_storm():
+    """End-to-end: repair planning under seeded spot preemptions loses no
+    frames (the ledger's conservation check raises otherwise) and records
+    fewer migrations than full FFD replanning."""
+    from repro.sim import FleetSimulator, ReactivePolicy, RepairPolicy, SCENARIOS
+    sc = SCENARIOS["spot_heavy"](n_streams=36, duration_h=12.0, seed=4)
+    cat = sc.catalog()
+    ffd = FleetSimulator(sc.demand, ReactivePolicy(ResourceManager(cat)),
+                         cat, sc.config).run()
+    rep = FleetSimulator(sc.demand, RepairPolicy(ResourceManager(cat)),
+                         cat, sc.config).run()
+    assert rep.preemptions > 0 or ffd.preemptions > 0
+    for r in rep.records:
+        assert r.frames_demanded == pytest.approx(
+            r.frames_analyzed + r.frames_dropped)
+    assert rep.migrations < ffd.migrations
+    assert rep.slo_attainment() > 0.85
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 10_000), st.integers(6, 24),
+           st.floats(0.0, 0.4), st.integers(0, 6), st.floats(0.0, 0.8))
+    @settings(max_examples=40, deadline=None)
+    def test_repair_invariants(seed, n, drop_p, n_add, drift_p):
+        _check_repair_invariants(seed, n, drop_p, n_add, drift_p)
+
+    @given(st.integers(0, 10_000), st.integers(6, 20), st.integers(1, 8))
+    @settings(max_examples=30, deadline=None)
+    def test_add_only_churn_moves_nothing(seed, n, n_add):
+        _check_add_only_moves_nothing(seed, n, n_add)

@@ -10,9 +10,10 @@ from repro.core import geo
 from repro.core.workload import PROGRAMS
 from repro.sim import (CameraSpec, DiurnalFleet, EventQueue, FleetSimulator,
                        FlashCrowd, Ledger, MixShift, PoissonChurn,
-                       PredictiveEWMAPolicy, ReactivePolicy, SCENARIOS,
-                       ScheduledPolicy, ServiceCalibration, SimConfig,
-                       StaticPeakPolicy, peak_streams, rush_hour_fps)
+                       PredictiveEWMAPolicy, ReactivePolicy, RepairPolicy,
+                       SCENARIOS, ScheduledPolicy, ServiceCalibration,
+                       SimConfig, StaticPeakPolicy, peak_streams,
+                       rush_hour_fps)
 
 
 def _run(scenario, policy_cls=ReactivePolicy, **kw):
@@ -197,6 +198,42 @@ def test_ledger_rejects_nonconserving_ticks():
                      instances_live=1, streams=1)
     with pytest.raises(ValueError):
         led.add_tick(bad, {})
+
+
+def test_repair_policy_cuts_migrations_on_rush_hour():
+    """The min-migration policy must not churn more than full FFD replanning
+    on the same seeded day, at comparable cost."""
+    sc = SCENARIOS["rush_hour"](n_streams=24)
+    react = _run(sc)
+    rep = _run(sc, RepairPolicy)
+    assert rep.migrations < react.migrations
+    assert rep.total_cost < 1.25 * react.total_cost
+    for r in rep.records:
+        assert r.frames_demanded == pytest.approx(
+            r.frames_analyzed + r.frames_dropped)
+
+
+def test_repair_defrags_reach_the_ledger():
+    """defrag_ratio=1.0 fires the escape hatch on every cost regression;
+    the fleet ledger must record those events per tick and in totals()."""
+    sc = SCENARIOS["rush_hour"](n_streams=24)
+    led = _run(sc, RepairPolicy, defrag_ratio=1.0)
+    assert led.defrags > 0
+    assert led.totals()["defrags"] == led.defrags
+    assert sum(r.defrags for r in led.records) == led.defrags
+    # the pure-repair run never defrags by default at this scale
+    led2 = _run(sc, RepairPolicy, defrag_ratio=None)
+    assert led2.defrags == 0
+
+
+def test_churn_storm_scenario_runs_end_to_end():
+    """Arrivals, departures and preemptions in one scenario: conservation
+    holds and the repair policy still serves the overwhelming majority."""
+    sc = SCENARIOS["churn_storm"](n_streams=18, duration_h=12.0)
+    led = _run(sc, RepairPolicy)
+    assert len(led.records) == int(sc.config.duration_h / sc.config.dt_h)
+    assert max(r.streams for r in led.records) > 18      # churn arrived
+    assert led.slo_attainment() > 0.9
 
 
 # -- adaptive hooks ----------------------------------------------------------
