@@ -36,6 +36,8 @@ _SUITES: list[tuple[str, str, str]] = [
     ("fleet_sim", "fleet simulator (beyond-paper)", "fleet_sim"),
     ("replan_churn", "replan churn: REPAIR vs FFD full replan (beyond-paper)",
      "replan_churn"),
+    ("scale_sweep", "scale sweep: 100/1k/10k streams, packed vs scalar "
+     "(beyond-paper)", "scale_sweep"),
     ("kernels", "pallas kernels (interpret-mode validation)",
      "kernel_sweep"),
 ]
@@ -47,14 +49,19 @@ def main() -> None:
     suites = _SUITES
     keys = [k for k, _, _ in suites]
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--only", choices=keys, default=None,
-                    help="run a single suite instead of the full sweep")
+    ap.add_argument("--only", default=None, metavar="SUITE",
+                    help="run a single suite instead of the full sweep "
+                         f"(one of: {', '.join(keys)})")
     ap.add_argument("--list", action="store_true", help="list suite keys")
     args = ap.parse_args()
     if args.list:
         print("\n".join(keys))
         return
     if args.only is not None:
+        if args.only not in keys:
+            # a typo must fail loudly with the catalog, never run nothing
+            ap.error(f"unknown suite {args.only!r}; known suites: "
+                     f"{', '.join(keys)}")
         suites = [s for s in suites if s[0] == args.only]
 
     print("name,us_per_call,derived")

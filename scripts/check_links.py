@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Fail CI on broken relative links in the repo's markdown docs.
+
+Scans README.md, DESIGN.md, ROADMAP.md, CHANGES.md and docs/*.md for
+``[text](target)`` links. External targets (http/https/mailto) are ignored;
+relative targets must resolve to an existing file/directory, and a
+``#fragment`` on a markdown target must match a heading in that file (GitHub
+anchor slug rules: lowercase, punctuation stripped, spaces to hyphens).
+
+Usage: python scripts/check_links.py  (exits 1 listing every broken link)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = [p for p in (
+    [ROOT / n for n in ("README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md")]
+    + sorted((ROOT / "docs").glob("*.md"))
+) if p.exists()]
+
+# target, optionally followed by a quoted link title: [text](path "title")
+LINK_RE = re.compile(r"\[[^\]]*\]\(\s*([^)\s]+)(?:\s+\"[^\"]*\")?\s*\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: drop non-word chars, spaces become hyphens."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    """All heading anchors, with GitHub's ``-1``/``-2`` suffixes for
+    duplicate headings."""
+    out: set[str] = set()
+    seen: dict[str, int] = {}
+    for h in HEADING_RE.findall(path.read_text()):
+        slug = slugify(h)
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check(path: pathlib.Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        dest = (path.parent / base).resolve() if base else path
+        if not dest.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+            continue
+        if frag and dest.suffix == ".md":
+            if slugify(frag) not in anchors_of(dest):
+                errors.append(f"{path.relative_to(ROOT)}: missing anchor "
+                              f"#{frag} in {base or path.name}")
+    return errors
+
+
+def main() -> None:
+    errors = [e for doc in DOCS for e in check(doc)]
+    for e in errors:
+        print(e)
+    if errors:
+        sys.exit(1)
+    print(f"checked {len(DOCS)} docs, all relative links resolve")
+
+
+if __name__ == "__main__":
+    main()

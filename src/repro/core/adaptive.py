@@ -45,7 +45,7 @@ ReplanTrigger = Callable[[int, Sequence[Stream], Plan], bool]
 
 @dataclasses.dataclass
 class AdaptiveManager:
-    """Replans when demand drifts.
+    """Replans when demand drifts (rates in frames/s, costs in $/hour).
 
     ``savings_threshold``: fraction of current cost a replan must save to be
     worth the migration disruption (hysteresis). A plan that can no longer

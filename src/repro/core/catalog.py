@@ -21,7 +21,9 @@ UTILIZATION_CAP = 0.90
 
 @dataclasses.dataclass(frozen=True)
 class InstanceType:
-    """One cloud instance configuration (a "truck" in the sidebar analogy)."""
+    """One cloud instance configuration (a "truck" in the sidebar analogy):
+    a raw capacity vector over ``dimensions`` (cores, GiB, GPU fraction,
+    GPU GiB by default) priced in $/hour per location."""
 
     name: str
     capacity: tuple[float, ...]          # raw capacity per dimension
@@ -53,7 +55,8 @@ class InstanceType:
 
 @dataclasses.dataclass(frozen=True)
 class Catalog:
-    """A set of instance types offered by one or more vendors."""
+    """A set of instance types offered by one or more vendors, each priced
+    in $/hour per datacenter location."""
 
     types: tuple[InstanceType, ...]
 

@@ -53,7 +53,25 @@ def ffd_pack_into(problem: Problem, bins: list[Bin],
     ``bins``/``bin_used`` (mutated in place; new bins append), opening a new
     bin by the lowest price-per-held-items rule when nothing fits. Shared by
     :func:`first_fit_decreasing` (empty seed) and the repair planner's delta
-    pass (seeded with the kept bins, so residual capacity fills first)."""
+    pass (seeded with the kept bins, so residual capacity fills first).
+
+    Problems built by the packed (columnwise) ``build_problem`` path carry
+    class-structured arrays and dispatch to the vectorized packer in
+    :mod:`repro.core.packed`, which produces bit-identical bins (see
+    tests/test_packed_parity.py); hand-built problems take the scalar loop
+    below.
+    """
+    from repro.core import packed as _packed
+    pp = _packed.get_packed(problem)
+    if pp is not None:
+        _packed.ffd_pack_packed(problem, pp, bins, bin_used, items)
+        return
+    _ffd_pack_into_scalar(problem, bins, bin_used, items)
+
+
+def _ffd_pack_into_scalar(problem: Problem, bins: list[Bin],
+                          bin_used: list[list[float]], items) -> None:
+    """The original per-item FFD loop — the parity/speedup baseline."""
     order = sorted(items, key=lambda i: _norm_size(problem, problem.items[i]),
                    reverse=True)
     for pos, i in enumerate(order):

@@ -18,6 +18,17 @@ from repro.core.workload import Stream
 
 @dataclasses.dataclass
 class ResourceManager:
+    """The paper's cloud resource manager (Fig. 1): plan instance rentals.
+
+    Given streams (each demanding a frame rate in frames/s) and a
+    :class:`~repro.core.catalog.Catalog` of instance types priced in $/hour
+    per location, ``plan`` runs the named strategy from
+    :data:`~repro.core.strategies.STRATEGIES` (exact packing, greedy
+    baselines, FFD, or incremental REPAIR) and returns a
+    :class:`~repro.core.strategies.Plan` whose ``hourly_cost`` is the total
+    rental price in $/hour.
+    """
+
     catalog: Catalog
     default_strategy: str = "ST3"
 

@@ -1,0 +1,449 @@
+"""Packed (columnwise) representation of the packing problem — the 10k-stream
+fast path.
+
+The object API (:class:`~repro.core.packing.Problem` / ``Item`` / ``Bin``)
+is pleasant to reason about but scales as O(streams x choices) Python objects
+per control-loop tick: at 10,000 streams over a 35-choice catalog that is
+350k requirement tuples *per replan*, and the FFD heuristic's
+cost-efficiency opening rule rescans every remaining item per opened bin.
+
+The packed path exploits the fleet's *class structure*: streams are
+(program, frame-rate, camera) instances drawn from a small set of
+requirement classes G (tens, not thousands), because requirement vectors are
+linear in fps and fps comes from a handful of diurnal curves. We therefore:
+
+* build requirement matrices **columnwise** — one ``(G, C, D)`` array of
+  per-class requirement vectors (``inf`` where incompatible) instead of N x C
+  Python tuples; items of one class *share* a single requirements tuple, so
+  the object view stays intact at O(G x C) construction cost;
+* run FFD over **runs** of identical items (maximal same-class blocks of the
+  size-sorted order) with numpy first-fit masks over all open bins at once,
+  falling back to exact per-copy arithmetic inside the chosen bin so
+  ``bin_used`` accumulates bit-identically to the scalar path;
+* evaluate the bin-opening cost-efficiency rule run-compressed (closed-form
+  "how many copies of this class still fit"), and reuse the previous opening
+  decision while the only change to the remaining items is the head run's
+  count and every choice's head fill is already saturated — which is exactly
+  when the decision provably cannot change.
+
+Everything here is semantics-preserving: ``tests/test_packed_parity.py``
+asserts bit-identical plans and ledgers against the scalar path, and
+``scalar_mode()`` switches the whole pipeline back to the original
+per-object code for baselines and property tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import geo
+from repro.core.packing import EPS, Bin, Infeasible, Item, Problem
+from repro.core.workload import requirement_columns
+
+# ---------------------------------------------------------------------------
+# Global switch: the scalar (pre-refactor) path stays available for parity
+# tests and the scale_sweep speedup baseline.
+# ---------------------------------------------------------------------------
+
+_ENABLED = True
+
+
+def enabled() -> bool:
+    """Whether the vectorized planning/demand path is active."""
+    return _ENABLED
+
+
+@contextlib.contextmanager
+def scalar_mode():
+    """Run the original per-object / per-stream code paths (parity baseline).
+
+    Inside this context ``build_problem`` builds Items the scalar way (no
+    packed arrays attached, so FFD takes its scalar path too) and
+    ``DiurnalFleet`` evaluates demand per camera instead of as arrays.
+    """
+    global _ENABLED
+    prev = _ENABLED
+    _ENABLED = False
+    try:
+        yield
+    finally:
+        _ENABLED = prev
+
+
+# Cached RTT feasibility: geo.max_fps is a pure function of (camera, region)
+# but costs a haversine per call; the scalar path recomputes it per
+# (stream, choice) pair.
+_MAX_FPS_CACHE: dict[tuple[str, str], float] = {}
+
+
+def max_fps_cached(camera: str, region: str) -> float:
+    key = (camera, region)
+    v = _MAX_FPS_CACHE.get(key)
+    if v is None:
+        v = geo.max_fps(camera, region)
+        _MAX_FPS_CACHE[key] = v
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Packed problem
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PackedProblem:
+    """Columnwise arrays mirroring a :class:`Problem`.
+
+    ``class_req[g, c]`` is class ``g``'s requirement vector under choice
+    ``c`` (``+inf`` where incompatible, so a fits-test fails naturally);
+    ``item_class[i]`` maps every item to its class. Capacities are the
+    usable (90%-capped) vectors, prices are $/hour — identical floats to the
+    object view, just laid out for whole-fleet operations.
+    """
+
+    item_class: np.ndarray        # (N,) int64
+    class_req: np.ndarray         # (G, C, D) float64, +inf = incompatible
+    class_compat: np.ndarray      # (G, C) bool
+    class_has_compat: np.ndarray  # (G,) bool
+    class_size: np.ndarray        # (G,) float64 — FFD norm size (l_inf frac)
+    class_kmax: np.ndarray        # (G, C) float64 — copies fitting an empty bin
+    capacity: np.ndarray          # (C, D) float64 — usable capacity
+    prices: np.ndarray            # (C,) float64 — $/hour
+    # requirement *groups*: classes that share (program, fps) — and therefore
+    # the same requirement vector on every choice — but may differ in RTT
+    # compatibility (different cameras). The opening rule compresses over
+    # groups: a greedy fill's accept count for a choice depends only on how
+    # many of a group's items are compatible, not on their interleaving.
+    class_group: np.ndarray       # (G,) int64 — group id per class
+    group_req: np.ndarray         # (G2, C, D) float64, inf = type-incompatible
+
+    @property
+    def ndim(self) -> int:
+        return self.capacity.shape[1]
+
+
+def get_packed(problem: Problem) -> Optional[PackedProblem]:
+    """The packed arrays attached to a problem, if it was built packed."""
+    return getattr(problem, "packed", None)
+
+
+def _class_arrays(class_reqs: list[tuple], capacity: np.ndarray,
+                  prices: np.ndarray) -> tuple:
+    """(class_req, compat, has_compat, size, kmax) from per-class req tuples."""
+    G, C = len(class_reqs), capacity.shape[0]
+    D = capacity.shape[1]
+    req = np.full((G, C, D), np.inf)
+    for g, per_choice in enumerate(class_reqs):
+        for c, r in enumerate(per_choice):
+            if r is not None:
+                req[g, c] = r
+    compat = np.isfinite(req).all(axis=2)
+    has_compat = compat.any(axis=1)
+
+    # norm size: max over compatible choices of the max per-dim fraction
+    # (same arithmetic as heuristics._norm_size: req/cap, 0-capacity dims
+    # contribute 0 when the requirement is 0 too).
+    with np.errstate(divide="ignore", invalid="ignore"):
+        frac = np.where(capacity[None, :, :] > 0,
+                        req / capacity[None, :, :],
+                        np.where(req <= 0, 0.0, np.inf))
+    frac_max = frac.max(axis=2)                         # (G, C)
+    size = np.where(compat, frac_max, -np.inf).max(axis=1)
+
+    # copies of a class fitting an *empty* bin of each choice (0 if
+    # incompatible): min over dims of floor((cap + EPS) / req).
+    with np.errstate(divide="ignore", invalid="ignore"):
+        kd = np.floor((capacity[None, :, :] + EPS) / req)
+    kd = np.where(req > 0, kd, np.inf)
+    kmax = np.where(compat, kd.min(axis=2), 0.0)
+    return req, compat, has_compat, size, kmax
+
+
+def build_packed_items(streams, choices, metas, target_fps,
+                       rtt_filter) -> Problem:
+    """Columnwise item construction: group streams into requirement classes,
+    compute each class's vector once per instance *type* (it does not vary by
+    location), apply the RTT feasibility column from the cached camera x
+    region matrix, and share one requirements tuple across all items of a
+    class. Bit-identical to the scalar loop (same ``requirement_for`` and
+    ``geo.max_fps`` floats), at O(G x C) instead of O(N x C) cost."""
+    # distinct instance types among the (type, location) metas
+    type_ids: dict[int, int] = {}
+    types = []
+    for (t, _loc) in metas:
+        if id(t) not in type_ids:
+            type_ids[id(t)] = len(types)
+            types.append(t)
+
+    class_of: dict[tuple, int] = {}
+    class_rep: list = []                 # representative stream per class
+    item_class = np.empty(len(streams), dtype=np.int64)
+    for n, s in enumerate(streams):
+        fps = target_fps if target_fps is not None else s.fps
+        cam = s.camera if (rtt_filter and s.camera is not None) else None
+        key = (id(s.program), fps, cam)
+        g = class_of.get(key)
+        if g is None:
+            g = len(class_rep)
+            class_of[key] = g
+            class_rep.append(s)
+        item_class[n] = g
+
+    group_of: dict[tuple, int] = {}
+    class_group = np.empty(len(class_rep), dtype=np.int64)
+    group_per_choice: list[list] = []
+    class_reqs: list[tuple] = []
+    for g, s in enumerate(class_rep):
+        fps = target_fps if target_fps is not None else s.fps
+        gkey = (id(s.program), fps)
+        g2 = group_of.get(gkey)
+        if g2 is None:
+            g2 = len(group_per_choice)
+            group_of[gkey] = g2
+            by_type = requirement_columns(s, types, target_fps)
+            group_per_choice.append(
+                [by_type[type_ids[id(t)]] for (t, _loc) in metas])
+        class_group[g] = g2
+        per_choice = []
+        for req, (t, loc) in zip(group_per_choice[g2], metas):
+            if req is not None and rtt_filter and s.camera is not None:
+                if max_fps_cached(s.camera, loc) < fps:
+                    req = None
+            per_choice.append(req)
+        class_reqs.append(tuple(per_choice))
+
+    items = tuple(Item(key=s.stream_id, requirements=class_reqs[g])
+                  for s, g in zip(streams, item_class))
+    problem = Problem(choices=tuple(choices), items=items)
+
+    capacity = np.array([c.capacity for c in choices], dtype=np.float64)
+    prices = np.array([c.price for c in choices], dtype=np.float64)
+    req, compat, has_compat, size, kmax = _class_arrays(
+        class_reqs, capacity, prices)
+    C, D = capacity.shape
+    group_req = np.full((len(group_per_choice), C, D), np.inf)
+    for g2, per_choice in enumerate(group_per_choice):
+        for c, r in enumerate(per_choice):
+            if r is not None:
+                group_req[g2, c] = r
+    packed = PackedProblem(item_class=item_class, class_req=req,
+                           class_compat=compat, class_has_compat=has_compat,
+                           class_size=size, class_kmax=kmax,
+                           capacity=capacity, prices=prices,
+                           class_group=class_group, group_req=group_req)
+    object.__setattr__(problem, "packed", packed)
+    return problem
+
+
+# ---------------------------------------------------------------------------
+# Packed FFD
+# ---------------------------------------------------------------------------
+
+
+def _open_efficiency(pp: PackedProblem, blocks) -> np.ndarray:
+    """Cost-efficiency of opening one bin of every choice, vectorized.
+
+    Exactly the scalar ``_cost_efficiency`` semantics, compressed over
+    requirement-group *blocks* of the remaining item order. Within a block
+    every item carries the same requirement vector per choice and differs at
+    most in RTT compatibility, and a greedy fill skips incompatible items
+    without touching state — so the accept count for choice ``c`` is
+    ``min(compatible-items-in-block, copies-that-still-fit)`` no matter how
+    the block's cameras interleave; once one copy is rejected every later
+    identical copy is too, so the closed-form count equals the per-item
+    scan. ``blocks`` is a sequence of ``(group_id, n_compat)`` with
+    ``n_compat`` a per-choice count vector. Returns price / items-held per
+    choice (``inf`` where nothing fits)."""
+    C, D = pp.capacity.shape
+    used = np.zeros((C, D))
+    count = np.zeros(C)
+    for g2, n_compat in blocks:
+        req = pp.group_req[g2]                      # (C, D)
+        resid = pp.capacity + EPS - used
+        with np.errstate(divide="ignore", invalid="ignore"):
+            kd = np.floor(resid / req)
+        kd = np.where(req > 0, kd, np.inf)          # only positive dims bind
+        k = np.minimum(kd.min(axis=1), n_compat)
+        k = np.maximum(k, 0.0)
+        if k.any():
+            used += k[:, None] * np.where(np.isfinite(req), req, 0.0)
+            count += k
+    with np.errstate(divide="ignore"):
+        eff = np.where(count > 0, pp.prices / np.maximum(count, 1.0), np.inf)
+    return eff
+
+
+def _choose_open(problem: Problem, pp: PackedProblem, g: int,
+                 blocks, item_idx: int) -> int:
+    """The scalar opening rule on packed arrays: among the class's compatible
+    choices, minimize (cost-efficiency over remaining items, price); raise
+    the same Infeasible errors the scalar path would."""
+    eff = _open_efficiency(pp, blocks)
+    cands = np.flatnonzero(pp.class_compat[g])
+    if cands.size == 0:
+        raise Infeasible(
+            f"item {problem.items[item_idx].key} has no compatible choice")
+    best = min((int(c) for c in cands),
+               key=lambda c: (eff[c], problem.choices[c].price))
+    if eff[best] == np.inf:
+        raise Infeasible(
+            f"item {problem.items[item_idx].key} fits no empty instance")
+    return best
+
+
+def ffd_pack_packed(problem: Problem, pp: PackedProblem, bins: list[Bin],
+                    bin_used: list[list[float]], items) -> None:
+    """Packed first-fit-decreasing over ``items`` into ``bins`` (mutated in
+    place, exactly like the scalar ``ffd_pack_into``).
+
+    Items are sorted by class norm-size (stable, so ties keep input order —
+    identical to the scalar stable sort) and processed as runs of equal
+    class. Per run, one numpy mask finds every currently-fitting open bin;
+    bins are then filled left-to-right with exact per-copy arithmetic (the
+    same ``u + r <= cap + EPS`` float comparisons and ``+=`` accumulation
+    order as the scalar path, so ``bin_used`` ends bit-identical). When no
+    bin fits, the opening rule runs run-compressed, with the previous
+    decision reused while it provably cannot change (every choice's head
+    fill saturated below the remaining count)."""
+    idx = np.fromiter(items, dtype=np.int64)
+    if idx.size == 0:
+        return
+    cls = pp.item_class[idx]
+    ok = pp.class_has_compat[cls]
+    if not ok.all():
+        bad = int(idx[int(np.argmin(ok))])      # first infeasible, input order
+        raise Infeasible(
+            f"item {problem.items[bad].key} has no compatible choice")
+
+    order = idx[np.argsort(-pp.class_size[cls], kind="stable")]
+    ocls = pp.item_class[order]
+    cuts = np.flatnonzero(ocls[1:] != ocls[:-1]) + 1
+    starts = np.concatenate(([0], cuts))
+    ends = np.concatenate((cuts, [order.size]))
+    run_class = [int(g) for g in ocls[starts]]
+    run_len = [int(v) for v in (ends - starts)]
+    n_runs = len(run_class)
+
+    # Block structure for the opening rule: maximal same-group segments of
+    # the run sequence (at night, thousands of equal-size single-item runs
+    # from different cameras collapse into a handful of blocks).
+    run_group = pp.class_group[np.asarray(run_class, dtype=np.int64)]
+    compat_f = pp.class_compat.astype(np.float64)
+    block_of_run = np.empty(n_runs, dtype=np.int64)
+    full_blocks: list[tuple[int, np.ndarray]] = []   # (group, n_compat)
+    # per-run suffix compat counts within the run's own block
+    suffix_compat = [None] * n_runs
+    ri = n_runs - 1
+    while ri >= 0:
+        g2 = int(run_group[ri])
+        acc = np.zeros(pp.capacity.shape[0])
+        lo = ri
+        while lo >= 0 and int(run_group[lo]) == g2:
+            lo -= 1
+        for rj in range(ri, lo, -1):
+            acc = acc + run_len[rj] * compat_f[run_class[rj]]
+            suffix_compat[rj] = acc
+            acc = acc.copy()
+        full_blocks.append((g2, suffix_compat[lo + 1]))
+        for rj in range(lo + 1, ri + 1):
+            block_of_run[rj] = len(full_blocks) - 1
+        ri = lo
+    full_blocks.reverse()
+    n_blocks = len(full_blocks)
+    block_of_run = (n_blocks - 1) - block_of_run
+
+    def rest_blocks(ri: int, consumed: int) -> list:
+        """Blocks of ``order[pos:]``: the current run's block minus what has
+        been consumed, then every later block whole."""
+        g = run_class[ri]
+        head = suffix_compat[ri] - consumed * compat_f[g]
+        return [(int(run_group[ri]), head)] + full_blocks[block_of_run[ri] + 1:]
+
+    # growable bin-state arrays (parallel to the `bins` object list)
+    nb = len(bins)
+    cap_rows = max(64, 1 << int(nb + 16).bit_length())
+    D = pp.ndim
+    bused = np.zeros((cap_rows, D))
+    bcap = np.zeros((cap_rows, D))
+    bchoice = np.zeros(cap_rows, dtype=np.int64)
+    if nb:
+        bused[:nb] = np.asarray(bin_used, dtype=np.float64)
+        bchoice[:nb] = [b.choice for b in bins]
+        bcap[:nb] = pp.capacity[bchoice[:nb]]
+
+    def grow() -> None:
+        nonlocal bused, bcap, bchoice, cap_rows
+        cap_rows *= 2
+        bused = np.concatenate([bused, np.zeros_like(bused)])
+        bcap = np.concatenate([bcap, np.zeros_like(bcap)])
+        bchoice = np.concatenate([bchoice, np.zeros_like(bchoice)])
+
+    n_preexisting = len(bins)
+    pos = 0                                   # global index into `order`
+    for ri in range(n_runs):
+        g = run_class[ri]
+        n = run_len[ri]
+        run_items = order[pos:pos + n]
+        reqs_c = pp.class_req[g]              # (C, D)
+        k = 0
+
+        if nb:
+            fit = np.flatnonzero(
+                (bused[:nb] + reqs_c[bchoice[:nb]]
+                 <= bcap[:nb] + EPS).all(axis=1))
+        else:
+            fit = ()
+        for b in fit:
+            if k >= n:
+                break
+            b = int(b)
+            r = reqs_c[bchoice[b]]
+            ub, cb = bused[b], bcap[b]
+            blist = bins[b].items
+            while k < n and (ub + r <= cb + EPS).all():
+                blist.append(int(run_items[k]))
+                ub += r
+                k += 1
+
+        # nothing open fits the rest of the run: open bins by the
+        # cost-efficiency rule, reusing the decision while it cannot change
+        cached_choice: Optional[int] = None
+        thr = float(pp.class_kmax[g].max())   # head saturation threshold
+        while k < n:
+            head = n - k
+            if cached_choice is not None and head >= thr:
+                # the only change since the cached decision is the head
+                # run's count, and every choice's head fill still saturates
+                # below it — the cost-efficiency argmin cannot have moved
+                best = cached_choice
+            else:
+                best = _choose_open(problem, pp, g, rest_blocks(ri, k),
+                                    int(run_items[k]))
+                cached_choice = best if head >= thr else None
+            if nb == cap_rows:
+                grow()
+            b = nb
+            nb += 1
+            bchoice[b] = best
+            bcap[b] = pp.capacity[best]
+            r = reqs_c[best]
+            # the scalar path seeds the new bin with the item's own vector
+            bused[b] = r
+            bins.append(Bin(choice=best, items=[int(run_items[k])]))
+            bin_used.append([0.0] * D)        # synced below
+            k += 1
+            ub, cb = bused[b], bcap[b]
+            blist = bins[b].items
+            while k < n and (ub + r <= cb + EPS).all():
+                blist.append(int(run_items[k]))
+                ub += r
+                k += 1
+        pos += n
+
+    # sync the object view: pre-existing lists updated in place (the repair
+    # planner keeps references), new bins get their final vectors
+    for i in range(nb):
+        bin_used[i][:] = [float(v) for v in bused[i]]

@@ -17,13 +17,18 @@ EPS = 1e-9
 
 @dataclasses.dataclass(frozen=True)
 class Choice:
-    """One (instance type, location) option — a truck model in the analogy."""
+    """One (instance type, location) option — a truck model in the analogy.
+
+    ``capacity`` is the usable (90%-capped) vector in the catalog's
+    dimension units (cores, GiB, GPU fraction, GPU GiB for the paper
+    catalogs; TFLOP/s and HBM GiB for the TPU one); ``price`` is $/hour.
+    """
 
     key: str                      # e.g. "g2.2xlarge@us-east-1"
     type_name: str
     location: str
     capacity: tuple[float, ...]   # usable capacity (90%-capped)
-    price: float
+    price: float                  # $/hour at this location
     has_gpu: bool = False         # carried from the catalog's InstanceType
 
 
@@ -40,6 +45,12 @@ class Item:
 
 @dataclasses.dataclass(frozen=True)
 class Problem:
+    """One multiple-choice vector bin-packing instance: every item (stream)
+    must land on exactly one bin (instance) of some choice, minimizing the
+    summed $/hour price. Problems built by the packed ``build_problem``
+    carry columnwise arrays (see :mod:`repro.core.packed`) as a non-field
+    attribute; the object API is unaffected."""
+
     choices: tuple[Choice, ...]
     items: tuple[Item, ...]
 
@@ -48,7 +59,14 @@ class Problem:
         if len(dims) > 1:
             raise ValueError("inconsistent capacity dimensionality")
         (d,) = dims or {0}
+        # the packed builder shares one requirements tuple across all items
+        # of a class — validating each distinct tuple once keeps construction
+        # O(classes x choices), not O(items x choices)
+        seen: set[int] = set()
         for it in self.items:
+            if id(it.requirements) in seen:
+                continue
+            seen.add(id(it.requirements))
             if len(it.requirements) != len(self.choices):
                 raise ValueError(f"item {it.key}: requirements must align with choices")
             for r in it.requirements:
@@ -87,8 +105,12 @@ class Bin:
 
 @dataclasses.dataclass
 class Solution:
+    """An assignment of every item to a bin; ``cost`` is the total rental
+    price in $/hour. ``optimal`` marks exact-solver proofs (heuristics and
+    repaired plans leave it False)."""
+
     bins: list[Bin]
-    cost: float
+    cost: float                   # $/hour
     optimal: bool = False
     note: str = ""
 

@@ -33,6 +33,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
+import numpy as np
+
+from repro.core import packed as packed_mod
 from repro.core.catalog import Catalog
 from repro.core.heuristics import ffd_pack_into, first_fit_decreasing
 from repro.core.packing import Bin, Problem, Solution, fits, validate
@@ -118,9 +121,17 @@ def _keep_and_evict(previous: Plan, problem: Problem):
     old_bin_of: dict[int, int] = {}
     evicted: list[int] = []
     departures = 0
+
+    # First pass: surviving members per old bin (choice mapped into the new
+    # problem, departures counted, incompatible members marked for eviction;
+    # the global eviction order — per bin, incompatible first, then overfull
+    # — is assembled in the second pass, identical to the scalar loop).
+    per_bin: list[tuple[int, Optional[int],
+                        list[tuple[int, tuple[float, ...]]], list[int]]] = []
     for obi, b in enumerate(previous.solution.bins):
         c = key2choice.get(previous.problem.choices[b.choice].key)
         members: list[tuple[int, tuple[float, ...]]] = []
+        pre_ev: list[int] = []
         for i in b.items:
             j = key2item.get(previous.problem.items[i].key)
             if j is None:
@@ -129,13 +140,44 @@ def _keep_and_evict(previous: Plan, problem: Problem):
             old_bin_of[j] = obi
             req = problem.items[j].requirements[c] if c is not None else None
             if req is None:
-                evicted.append(j)
+                pre_ev.append(j)
             else:
                 members.append((j, req))
+        per_bin.append((obi, c, members, pre_ev))
+
+    # Residual-capacity screen on packed arrays: one vectorized pass totals
+    # every kept bin's new requirements and flags bins that could be
+    # overfull. numpy's pairwise summation can differ from the scalar
+    # member-order sums by ~1 ulp, so the margin is generous (1e-6 vs the
+    # 1e-9 decision threshold) and flagged bins re-check exactly below —
+    # decisions are bit-identical to the scalar path.
+    pp = packed_mod.get_packed(problem)
+    survivors = [(n, c, members) for n, (_, c, members, _) in enumerate(per_bin)
+                 if c is not None and members]
+    maybe_over = {n: True for n, _, _ in survivors}
+    if pp is not None and survivors:
+        bin_id = np.concatenate([
+            np.full(len(members), k, dtype=np.int64)
+            for k, (_, _, members) in enumerate(survivors)])
+        item_idx = np.fromiter(
+            (j for _, _, members in survivors for j, _ in members),
+            dtype=np.int64)
+        choice_idx = np.concatenate([
+            np.full(len(members), c, dtype=np.int64)
+            for _, c, members in survivors])
+        reqs = pp.class_req[pp.item_class[item_idx], choice_idx]
+        totals = np.zeros((len(survivors), problem.ndim))
+        np.add.at(totals, bin_id, reqs)
+        caps = pp.capacity[[c for _, c, _ in survivors]]
+        flags = np.any(totals > caps - 1e-6, axis=1)
+        maybe_over = {n: bool(f) for (n, _, _), f in zip(survivors, flags)}
+
+    for n, (obi, c, members, pre_ev) in enumerate(per_bin):
+        evicted.extend(pre_ev)
         if c is None or not members:
             continue
         cap = problem.choices[c].capacity
-        while members:
+        while members and maybe_over[n]:
             used = [sum(r[k] for _, r in members)
                     for k in range(problem.ndim)]
             over = [k for k in range(problem.ndim)

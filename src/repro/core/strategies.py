@@ -29,7 +29,11 @@ from repro.core.workload import Stream
 
 @dataclasses.dataclass
 class Plan:
-    """A resource allocation: which instances to rent, what runs where."""
+    """A resource allocation: which instances to rent, what runs where.
+
+    ``hourly_cost`` is in $/hour; each bin of ``solution`` is one rented
+    instance holding the streams (frames/s demands) packed into it.
+    """
 
     solution: Solution
     problem: Problem
@@ -37,7 +41,17 @@ class Plan:
 
     @property
     def hourly_cost(self) -> float:
+        """Total rental price of the planned instances, $/hour."""
         return self.solution.cost
+
+    def signature(self) -> tuple:
+        """Canonical comparable form: ordered (choice key, member stream
+        keys) per bin plus the exact $/hour cost. Two plans are
+        bit-identical iff their signatures are equal — the parity notion
+        the packed-vs-scalar tests and the scale_sweep CI gate share."""
+        return ([(self.problem.choices[b.choice].key,
+                  [self.problem.items[i].key for i in b.items])
+                 for b in self.solution.bins], self.solution.cost)
 
     def instance_counts(self) -> dict[str, int]:
         return self.solution.instance_counts(self.problem)
@@ -70,12 +84,23 @@ def build_problem(streams: Sequence[Stream], catalog: Catalog,
                   locations: Optional[Sequence[str]] = None,
                   target_fps: Optional[float] = None,
                   rtt_filter: bool = False,
-                  gpu_only: bool = False, cpu_only: bool = False) -> Problem:
+                  gpu_only: bool = False, cpu_only: bool = False,
+                  packed: Optional[bool] = None) -> Problem:
     """Assemble the packing problem from streams + catalog (+ geo constraints).
 
     With ``rtt_filter``, an item is compatible with a (type, location) choice
     only if the camera's RTT to that location sustains the stream's frame rate.
+
+    ``packed`` selects between the columnwise (vectorized) item builder —
+    the default, which groups streams into requirement classes and attaches
+    the arrays the fast FFD path consumes — and the original per-stream
+    scalar loop (``packed=False``, or anything inside
+    ``repro.core.packed.scalar_mode()``). Both produce the same Problem,
+    bit for bit; the packed one does it in O(classes x choices) instead of
+    O(streams x choices).
     """
+    from repro.core import packed as packed_mod
+
     choices: list[Choice] = []
     metas: list[tuple[InstanceType, str]] = []
     for t in catalog.types:
@@ -93,6 +118,12 @@ def build_problem(streams: Sequence[Stream], catalog: Catalog,
             metas.append((t, loc))
     if not choices:
         raise Infeasible("catalog empty after strategy filters")
+
+    if packed is None:
+        packed = packed_mod.enabled()
+    if packed:
+        return packed_mod.build_packed_items(streams, choices, metas,
+                                             target_fps, rtt_filter)
 
     items: list[Item] = []
     for s in streams:
@@ -238,6 +269,12 @@ def repair_incremental(streams: Sequence[Stream], catalog: Catalog,
                        config=config or RepairConfig()).plan
 
 
+# The planner registry ResourceManager.plan dispatches on. Paper strategies:
+# ST1/ST2/ST3 (Fig. 3 CPU/GPU selection, exact solver) and NL/ARMVAC/GCL
+# (Fig. 6 type x location; ARMVAC+ is our improved greedy) — these take a
+# target_fps in frames/s. Beyond-paper fleet strategies: FFD (linear-time
+# first-fit-decreasing at each stream's own rate) and REPAIR (min-migration
+# incremental replanning). Every strategy returns a Plan costed in $/hour.
 STRATEGIES: dict[str, Callable] = {
     "ST1": st1_cpu_only, "ST2": st2_gpu_only, "ST3": st3_multiple_choice,
     "NL": nearest_location, "ARMVAC": armvac, "ARMVAC+": armvac_plus, "GCL": gcl,

@@ -119,36 +119,50 @@ def streams_from_measured(arch: str,
 def streams_from_engine(arch: str, engine, *,
                         kv_seq: int = 32_768) -> list[LLMStream]:
     """Packing items straight from a serving engine's ``measured_rates()``
-    export — the one-call version of the profile-then-pack loop. The engine
-    must have served (and been timed on) some requests first; an engine with
-    no wall time yields no items.
+    export (decode throughput per stream, tokens/s) — the one-call version
+    of the profile-then-pack loop. Each item's requirement vector is
+    (sustained TFLOP/s, HBM GiB); the resulting plan is costed in $/hour
+    like every other catalog. The engine must have served (and been timed
+    on) some requests first; an engine with no wall time yields no items.
     """
     return streams_from_measured(arch, engine.measured_rates(), kv_seq=kv_seq)
 
 
 def build_tpu_problem(streams: Sequence[LLMStream], catalog: Catalog,
                       dryrun_dir: Optional[str] = None):
-    """Packing problem over TPU slices; reuses repro.core.packing directly."""
+    """Packing problem over TPU slices; reuses repro.core.packing directly.
+
+    Requirement construction is columnwise, like the camera-fleet
+    ``build_problem``: the usable-capacity matrix is built once per choice,
+    each distinct (TFLOP/s, HBM GiB) requirement vector is compared against
+    the whole column in one numpy pass, and items with equal requirements
+    share a single requirements tuple — O(distinct reqs x choices) instead
+    of O(streams x choices).
+    """
+    import numpy as np
+
     from repro.core.catalog import UTILIZATION_CAP
     from repro.core.packing import Choice, Item, Problem
 
     choices = []
-    metas = []
     for t in catalog.types:
         for loc, price in sorted(t.prices.items()):
             choices.append(Choice(key=f"{t.name}@{loc}", type_name=t.name,
                                   location=loc,
                                   capacity=t.usable(UTILIZATION_CAP),
                                   price=price, has_gpu=t.has_gpu))
-            metas.append(t)
+    usable = np.array([c.capacity for c in choices])          # (C, D)
+
+    req_tuples: dict[tuple[float, float], tuple] = {}
     items = []
     for s in streams:
         req = s.requirement(dryrun_dir)
-        reqs = []
-        for t in metas:
-            usable = t.usable()
-            reqs.append(req if all(r <= u for r, u in zip(req, usable)) else None)
-        items.append(Item(key=s.stream_id, requirements=tuple(reqs)))
+        shared = req_tuples.get(req)
+        if shared is None:
+            ok = (np.asarray(req) <= usable).all(axis=1)      # (C,)
+            shared = tuple(req if fit else None for fit in ok)
+            req_tuples[req] = shared
+        items.append(Item(key=s.stream_id, requirements=shared))
     return Problem(choices=tuple(choices), items=tuple(items))
 
 

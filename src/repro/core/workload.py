@@ -91,7 +91,8 @@ PROGRAMS = {"VGG16": VGG16, "ZF": ZF}
 
 @dataclasses.dataclass(frozen=True)
 class Stream:
-    """One analysis program bound to one camera at a desired frame rate."""
+    """One analysis program bound to one camera at a desired frame rate
+    (``fps`` in frames/s); the box being packed onto $/hour instances."""
 
     stream_id: str
     program: AnalysisProgram
@@ -122,6 +123,18 @@ class Stream:
         if any(r > u + 1e-9 for r, u in zip(req, usable)):
             return None
         return req
+
+
+def requirement_columns(stream: Stream, types: Sequence[InstanceType],
+                        target_fps: Optional[float] = None
+                        ) -> list[Optional[tuple[float, ...]]]:
+    """One *column* of the requirement matrix: this stream's vector on every
+    instance type (None = incompatible), at ``target_fps`` frames/s or the
+    stream's own rate. The packed ``build_problem`` evaluates one column per
+    (program, frame-rate) class and broadcasts it across locations — the
+    requirement vector never varies by location, only RTT feasibility does
+    — so construction is O(classes x types), not O(streams x choices)."""
+    return [stream.requirement_for(t, fps=target_fps) for t in types]
 
 
 def make_streams(spec: Sequence[tuple[str, float, int]], camera_ids: Sequence[str] | None = None) -> list[Stream]:

@@ -36,7 +36,8 @@ from repro.core.workload import Stream
 
 
 class StaticPeakPolicy:
-    """Provision the scanned peak once; ignore demand thereafter."""
+    """Provision the scanned peak (each stream's maximum frames/s over the
+    horizon) once; ignore demand thereafter. Maximum SLO, maximum $/hour."""
 
     def __init__(self, manager: ResourceManager, peak: Sequence[Stream],
                  strategy: str = "FFD") -> None:
@@ -54,7 +55,10 @@ class StaticPeakPolicy:
 
 
 class ReactivePolicy:
-    """Adaptive replanning with hysteresis (the paper's runtime manager)."""
+    """Adaptive replanning with hysteresis (the paper's runtime manager):
+    replan when the plan cannot serve the demanded frames/s, or when a
+    replan saves more than ``savings_threshold`` (a fraction of the current
+    plan's $/hour cost)."""
 
     def __init__(self, manager: ResourceManager, strategy: str = "FFD",
                  savings_threshold: float = 0.10, replan_trigger=None,
@@ -70,7 +74,8 @@ class ReactivePolicy:
 
 
 class RepairPolicy(ReactivePolicy):
-    """Reactive control loop whose replans are min-migration repairs.
+    """Reactive control loop whose replans are min-migration repairs
+    (demanded rates in frames/s, plan costs in $/hour).
 
     Preemption replays and demand-growth replans keep every still-feasible
     placement and re-pack only the orphaned/overflowing delta; cost drift is
@@ -114,8 +119,9 @@ class ScheduledPolicy(ReactivePolicy):
 
 
 class PredictiveEWMAPolicy(ReactivePolicy):
-    """Plan for a one-tick-ahead forecast: EWMA-smoothed per-stream trend,
-    floored at current demand so falling forecasts never under-provision."""
+    """Plan for a one-tick-ahead forecast: EWMA-smoothed per-stream trend in
+    frames/s, floored at current demand so falling forecasts never
+    under-provision, capped at ``cap_fps`` frames/s."""
 
     def __init__(self, manager: ResourceManager, strategy: str = "FFD",
                  savings_threshold: float = 0.10, alpha: float = 0.3,

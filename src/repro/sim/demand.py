@@ -28,19 +28,21 @@ class DemandModel(Protocol):
 
 @dataclasses.dataclass(frozen=True)
 class CameraSpec:
-    """One camera's demand profile: a diurnal curve between base and peak."""
+    """One camera's demand profile: a diurnal curve between ``base_fps`` and
+    ``peak_fps`` (both in frames/s, reached at local rush hours)."""
 
     stream_id: str
     camera: str                  # key in geo.CAMERAS
     program: str                 # key in workload.PROGRAMS
-    base_fps: float
-    peak_fps: float
+    base_fps: float              # frames/s off-peak
+    peak_fps: float              # frames/s at the rush-hour crest
 
 
 def rush_hour_fps(local_h: float, base: float, peak: float,
                   width_h: float = 1.5) -> float:
-    """Double-peaked diurnal curve: morning (8:30) and evening (17:30) rush
-    hours as Gaussian bumps over a quiet base rate (paper Fig. 5's shape)."""
+    """Demanded frame rate (frames/s) at local hour ``local_h``: morning
+    (8:30) and evening (17:30) rush hours as Gaussian bumps of width
+    ``width_h`` hours over a quiet base rate (paper Fig. 5's shape)."""
     bump = (math.exp(-((local_h - 8.5) / width_h) ** 2)
             + math.exp(-((local_h - 17.5) / width_h) ** 2))
     return base + (peak - base) * min(1.0, bump)
@@ -48,26 +50,83 @@ def rush_hour_fps(local_h: float, base: float, peak: float,
 
 @dataclasses.dataclass(frozen=True)
 class DiurnalFleet:
-    """Each camera follows the rush-hour curve in its own local time."""
+    """Each camera follows the rush-hour curve in its own local time.
+
+    Demand is evaluated *batched*: one numpy pass computes every camera's
+    local hour and rush-hour frame rate (frames/s) per tick, instead of a
+    Python call per camera — the per-stream loop only constructs the
+    ``Stream`` objects. ``repro.core.packed.scalar_mode()`` switches back to
+    the original per-camera evaluation (the parity baseline); both paths
+    produce identical streams bit for bit (see tests/test_packed_parity.py).
+    """
 
     cameras: tuple[CameraSpec, ...]
     width_h: float = 1.5
 
+    def _arrays(self):
+        """Cached per-camera columns: (utc offsets h, base fps, peak fps,
+        program objects, stream ids, camera ids)."""
+        cached = getattr(self, "_cols", None)
+        if cached is None:
+            cached = (
+                np.array([geo.utc_offset_hours(c.camera)
+                          for c in self.cameras]),
+                np.array([c.base_fps for c in self.cameras]),
+                np.array([c.peak_fps for c in self.cameras]),
+                [PROGRAMS[c.program] for c in self.cameras],
+                [c.stream_id for c in self.cameras],
+                [c.camera for c in self.cameras],
+            )
+            object.__setattr__(self, "_cols", cached)
+        return cached
+
+    def fps_at(self, t_h: float) -> np.ndarray:
+        """All cameras' demanded frame rates (frames/s) at UTC hour ``t_h``
+        as one vector — the batched form of :func:`rush_hour_fps`."""
+        offs, base, peak, _, _, _ = self._arrays()
+        local_h = np.mod(t_h + offs, 24.0)
+        bump = (np.exp(-((local_h - 8.5) / self.width_h) ** 2)
+                + np.exp(-((local_h - 17.5) / self.width_h) ** 2))
+        return base + (peak - base) * np.minimum(1.0, bump)
+
     def streams_at(self, t_h: float) -> list[Stream]:
+        from repro.core import packed
+        if not packed.enabled():
+            out = []
+            for c in self.cameras:
+                fps = rush_hour_fps(geo.local_hour(t_h, c.camera),
+                                    c.base_fps, c.peak_fps, self.width_h)
+                out.append(Stream(c.stream_id, PROGRAMS[c.program],
+                                  fps=round(fps, 3), camera=c.camera))
+            return out
+        _, _, _, programs, ids, cams = self._arrays()
+        # np.round is verified bit-identical to the scalar round(., 3) on
+        # this curve family (tests/test_packed_parity.py covers it end to
+        # end); tolist() converts to Python floats in one pass
+        fps = np.round(self.fps_at(t_h), 3).tolist()
+        # reuse the frozen Stream while a camera's rounded rate is unchanged
+        # (diurnal curves plateau at base and peak) — identical objects, no
+        # per-tick reallocation for the stable part of the fleet
+        cache = getattr(self, "_stream_cache", None)
+        if cache is None:
+            cache = [None] * len(self.cameras)
+            object.__setattr__(self, "_stream_cache", cache)
         out = []
-        for c in self.cameras:
-            fps = rush_hour_fps(geo.local_hour(t_h, c.camera),
-                                c.base_fps, c.peak_fps, self.width_h)
-            out.append(Stream(c.stream_id, PROGRAMS[c.program],
-                              fps=round(fps, 3), camera=c.camera))
+        for n, (sid, prog, fr, cam) in enumerate(zip(ids, programs, fps, cams)):
+            s = cache[n]
+            if s is None or s.fps != fr:
+                s = Stream(sid, prog, fps=fr, camera=cam)
+                cache[n] = s
+            out.append(s)
         return out
 
 
 @dataclasses.dataclass(frozen=True)
 class PoissonChurn:
-    """Cameras come and go: Poisson arrivals over the horizon, each living an
-    exponential lifetime, cycling through a pool of camera templates. The
-    whole arrival schedule is drawn once at construction from the seed."""
+    """Cameras come and go: Poisson arrivals (``rate_per_h`` per simulated
+    hour) over the horizon, each living an exponential lifetime of mean
+    ``mean_lifetime_h`` hours, cycling through a pool of camera templates.
+    The whole arrival schedule is drawn once at construction from the seed."""
 
     inner: DemandModel
     templates: tuple[CameraSpec, ...]
@@ -143,24 +202,42 @@ class MixShift:
     night_end_h: float = 6.0
 
     def _selected(self, stream_id: str) -> bool:
-        return (zlib.crc32(stream_id.encode()) % 1000) < self.fraction * 1000
+        # pure function of the id — memoized so a 10k-stream fleet does not
+        # re-hash every stream every tick
+        memo = getattr(self, "_memo", None)
+        if memo is None:
+            memo = {}
+            object.__setattr__(self, "_memo", memo)
+        sel = memo.get(stream_id)
+        if sel is None:
+            sel = (zlib.crc32(stream_id.encode()) % 1000) < self.fraction * 1000
+            memo[stream_id] = sel
+        return sel
 
     def streams_at(self, t_h: float) -> list[Stream]:
+        # the night test depends only on the camera, not the stream — decide
+        # once per distinct camera per tick instead of per stream
+        night_of: dict[str, bool] = {}
+        prog = PROGRAMS[self.night_program]
         out = []
         for s in self.inner.streams_at(t_h):
-            if s.camera is not None and self._selected(s.stream_id):
-                lh = geo.local_hour(t_h, s.camera)
-                if lh >= self.night_start_h or lh < self.night_end_h:
-                    s = dataclasses.replace(
-                        s, program=PROGRAMS[self.night_program])
+            if s.camera is not None:
+                night = night_of.get(s.camera)
+                if night is None:
+                    lh = geo.local_hour(t_h, s.camera)
+                    night = lh >= self.night_start_h or lh < self.night_end_h
+                    night_of[s.camera] = night
+                if night and self._selected(s.stream_id):
+                    s = dataclasses.replace(s, program=prog)
             out.append(s)
         return out
 
 
 def peak_streams(demand: DemandModel, horizon_h: float,
                  step_h: float = 0.5) -> list[Stream]:
-    """Scan the horizon and return every stream at its maximum demanded rate
-    — what a static peak-provisioned deployment must plan for."""
+    """Scan ``horizon_h`` simulated hours (every ``step_h``) and return each
+    stream at its maximum demanded rate in frames/s — what a static
+    peak-provisioned deployment must plan (and pay $/hour) for."""
     best: dict[str, Stream] = {}
     t = 0.0
     while t < horizon_h:

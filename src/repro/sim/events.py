@@ -23,7 +23,11 @@ END = "end"                    # end of simulation horizon
 
 @dataclasses.dataclass(order=True, frozen=True)
 class Event:
-    time: float
+    """One simulation event at ``time`` (simulated hours since the start);
+    ``seq`` is the insertion tie-breaker, ``kind`` one of TICK / PREEMPT /
+    END, ``payload`` the instance id for preemptions."""
+
+    time: float                   # simulated hours
     seq: int
     kind: str = dataclasses.field(compare=False)
     payload: Any = dataclasses.field(compare=False, default=None)

@@ -33,6 +33,13 @@ from repro.sim.ledger import Ledger, ServiceCalibration, TickRecord
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
+    """Simulation knobs; every duration/rate is in simulated hours.
+
+    ``spot_discount`` is the spot base price as a fraction of the on-demand
+    $/hour price; ``preempt_hazard_per_h`` the per-instance reclaim hazard
+    per simulated hour.
+    """
+
     duration_h: float = 24.0
     dt_h: float = 1.0
     boot_delay_h: float = 0.05           # 3 minutes
@@ -44,6 +51,14 @@ class SimConfig:
 
 
 class FleetSimulator:
+    """Replay a demand model against an autoscaling policy (module doc above).
+
+    ``run()`` returns the :class:`~repro.sim.ledger.Ledger`: per-tick $
+    spent, frames demanded/analyzed/dropped (frames = frames/s x seconds),
+    migrations and preemptions — the two axes (dollars, service) every
+    policy is compared on.
+    """
+
     def __init__(self, demand: DemandModel, policy, catalog: Catalog,
                  config: SimConfig = SimConfig(),
                  calibration: Optional[ServiceCalibration] = None) -> None:

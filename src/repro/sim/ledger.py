@@ -57,15 +57,23 @@ class ServiceCalibration:
 
 @dataclasses.dataclass(frozen=True)
 class TickRecord:
-    t: float
+    """One accounting interval of the simulation (the benchmark JSON
+    artifacts serialize these; docs/simulator.md documents the schema).
+
+    Frames are counts over the interval (frames/s x seconds); ``cost`` is
+    dollars accrued over the interval; conservation holds exactly:
+    ``frames_demanded == frames_analyzed + frames_dropped``.
+    """
+
+    t: float                      # interval start, simulated hours (UTC)
     cost: float                   # $ accrued this tick
     frames_demanded: float
     frames_analyzed: float
     frames_dropped: float
-    migrations: int
-    preemptions: int
-    instances_live: int
-    streams: int
+    migrations: int               # streams whose instance changed this tick
+    preemptions: int              # spot reclaims that landed this tick
+    instances_live: int           # live instances at the decision point
+    streams: int                  # demanded streams at the decision point
     defrags: int = 0              # repair-mode full-replan escape hatches
 
 
@@ -123,6 +131,13 @@ class Ledger:
         """Fraction of demanded frames actually analyzed on time."""
         d = self.frames_demanded
         return (self.frames_analyzed / d) if d > 0 else 1.0
+
+    def signature(self) -> tuple:
+        """Canonical comparable form: every tick record (exact floats) plus
+        the rounded totals. Two simulation runs are bit-identical iff their
+        signatures are equal — shared by the parity tests and the
+        scale_sweep CI gate."""
+        return (tuple(self.records), self.totals())
 
     def totals(self) -> dict:
         """Deterministic summary (rounded to stable precision) — equal across

@@ -40,6 +40,13 @@ ALL_CAMERAS = tuple(sorted(geo.CAMERAS))
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
+    """A ready-to-run fleet day: demand model + sim config + catalog.
+
+    Factories in :data:`SCENARIOS` build these by name with optional
+    overrides (``n_streams``, ``duration_h`` in simulated hours, ``seed``);
+    see docs/simulator.md for what each scenario stresses.
+    """
+
     name: str
     demand: DemandModel
     config: SimConfig
@@ -150,6 +157,28 @@ def churn_storm(n_streams: int = 72, duration_h: float = 24.0,
                     "source at once (min-migration stress test)")
 
 
+def mega_city(n_streams: int = 10_000, duration_h: float = 24.0,
+              seed: int = 0) -> Scenario:
+    """Fleet-scale stress test: 10k cameras worldwide (the 12 cities map to
+    all 9 catalog regions), diurnal curves in local time, a night-time
+    program-mix shift, and a 4x evening flash crowd on the European cameras
+    landing on top of their rush-hour peak. Runs entirely on the vectorized
+    demand + packed-planner path; ``benchmarks/scale_sweep.py`` gates its
+    24 h wall-clock and its parity against the scalar planner."""
+    base = DiurnalFleet(_fleet(ALL_CAMERAS, n_streams,
+                               zf_base=0.2, zf_peak=2.5, vgg_every=3))
+    shifted = MixShift(base, night_program="VGG16", fraction=0.25)
+    demand = FlashCrowd(shifted, start_h=17.0, duration_h=2.0,
+                        multiplier=4.0, cameras=frozenset(EU_CAMERAS),
+                        cap_fps=8.0)
+    return Scenario(
+        name="mega_city",
+        demand=demand,
+        config=SimConfig(duration_h=duration_h, seed=seed),
+        description="10k streams, 9 regions: diurnal + night mix shift + "
+                    "4x EU evening flash crowd (vectorized-path stress test)")
+
+
 SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "steady": steady,
     "rush_hour": rush_hour,
@@ -157,4 +186,5 @@ SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "spot_heavy": spot_heavy,
     "flash_crowd": flash_crowd,
     "churn_storm": churn_storm,
+    "mega_city": mega_city,
 }
