@@ -36,6 +36,8 @@ _SUITES: list[tuple[str, str, str]] = [
     ("fleet_sim", "fleet simulator (beyond-paper)", "fleet_sim"),
     ("replan_churn", "replan churn: REPAIR vs FFD full replan (beyond-paper)",
      "replan_churn"),
+    ("spot_bidding", "spot bidding: mixed plans vs on-demand-only "
+     "(beyond-paper)", "spot_bidding"),
     ("scale_sweep", "scale sweep: 100/1k/10k streams, packed vs scalar "
      "(beyond-paper)", "scale_sweep"),
     ("kernels", "pallas kernels (interpret-mode validation)",

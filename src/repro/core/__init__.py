@@ -12,6 +12,9 @@ from repro.core.adaptive import AdaptiveManager
 from repro.core.catalog import (Catalog, InstanceType, UTILIZATION_CAP,
                                 fig3_catalog, fig6_catalog, table1_catalog)
 from repro.core.manager import ResourceManager
+from repro.core.markets import (MarketQuote, MixedConfig, MixedResult,
+                                mixed_plan, quotes, replica_group,
+                                spot_affinity_violations, spot_problem)
 from repro.core.packing import (Bin, Choice, Infeasible, Item, Problem,
                                 Solution, validate)
 from repro.core.repair import (RepairConfig, RepairResult,
@@ -23,10 +26,12 @@ from repro.core.workload import (FIG3_SCENARIOS, PROGRAMS, VGG16, ZF,
 
 __all__ = [
     "AdaptiveManager", "AnalysisProgram", "Bin", "Catalog", "Choice",
-    "FIG3_SCENARIOS", "Infeasible", "InstanceType", "Item", "PROGRAMS",
+    "FIG3_SCENARIOS", "Infeasible", "InstanceType", "Item", "MarketQuote",
+    "MixedConfig", "MixedResult", "PROGRAMS",
     "Plan", "Problem", "RepairConfig", "RepairResult", "ResourceManager",
     "STRATEGIES", "Solution", "Stream", "UTILIZATION_CAP", "VGG16", "ZF",
     "build_problem", "count_plan_migrations", "fig3_catalog", "fig6_catalog",
-    "make_streams", "plan_assignment", "repair_plan", "table1_catalog",
-    "validate",
+    "make_streams", "mixed_plan", "plan_assignment", "quotes", "repair_plan",
+    "replica_group", "spot_affinity_violations", "spot_problem",
+    "table1_catalog", "validate",
 ]

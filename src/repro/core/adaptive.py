@@ -73,6 +73,12 @@ class AdaptiveManager:
     target_fps: Optional[float] = None
     replan_trigger: Optional[ReplanTrigger] = None
     repair: Optional[RepairConfig] = None
+    # Mixed-market mode (core/markets.py): when ``mixed`` is set, planning
+    # goes through ``manager.plan_mixed`` with the spot multipliers read
+    # from ``multipliers_fn`` at every decision — plans carry on-demand and
+    # spot bins, replans are min-migration mixed repairs.
+    mixed: Optional[object] = None               # markets.MixedConfig
+    multipliers_fn: Optional[Callable[[], dict]] = None
 
     current: Optional[Plan] = None
     events: list = dataclasses.field(default_factory=list)
@@ -80,6 +86,9 @@ class AdaptiveManager:
     def __post_init__(self) -> None:
         if self.strategy == "REPAIR" and self.repair is None:
             self.repair = RepairConfig()
+
+    def _multipliers(self) -> dict:
+        return self.multipliers_fn() if self.multipliers_fn is not None else {}
 
     @property
     def repair_mode(self) -> bool:
@@ -121,6 +130,11 @@ class AdaptiveManager:
 
     def _candidate(self, streams: Sequence[Stream]) -> tuple[Plan, int, bool]:
         """(candidate plan, migrations it would perform, defrag?)."""
+        if self.mixed is not None:
+            res = self.manager.plan_mixed(streams, self._multipliers(),
+                                          previous=self.current,
+                                          config=self.mixed)
+            return res.plan, res.migrations, res.defrag
         if self.repair_mode:
             res: RepairResult = repair_plan(
                 streams, self.manager.catalog, previous=self.current,
@@ -141,9 +155,14 @@ class AdaptiveManager:
         if self.current is None:
             # first placement goes through the configured strategy — repair
             # mode only changes how *replans* are computed (with no previous
-            # plan there is nothing to repair anyway)
-            self.current = self.manager.plan(streams, self.strategy,
-                                             self.target_fps)
+            # plan there is nothing to repair anyway); mixed mode plans the
+            # initial floor/burst split fresh
+            if self.mixed is not None:
+                self.current = self.manager.plan_mixed(
+                    streams, self._multipliers(), config=self.mixed).plan
+            else:
+                self.current = self.manager.plan(streams, self.strategy,
+                                                 self.target_fps)
             # every stream is an arrival, nothing migrates
             self.events.append(AdaptiveEvent(t, "replan",
                                              self.current.hourly_cost,
@@ -162,7 +181,13 @@ class AdaptiveManager:
             self.events.append(AdaptiveEvent(t, "forced-replan",
                                              candidate.hourly_cost, migrations,
                                              defrag=defrag))
-        elif candidate.hourly_cost < self.current.hourly_cost * (1 - self.savings_threshold):
+        elif (candidate.hourly_cost
+              < self.current.hourly_cost * (1 - self.savings_threshold)) \
+                or (self.mixed is not None and migrations == 0
+                    and candidate.hourly_cost != self.current.hourly_cost):
+            # mixed mode: a zero-migration candidate is the same placement
+            # repriced at the current spot quotes — adopting it is free and
+            # keeps the plan's $/hour honest as the price walk moves
             self.current = candidate
             self.events.append(AdaptiveEvent(t, "replan", candidate.hourly_cost,
                                              migrations, defrag=defrag))

@@ -46,6 +46,18 @@ class ResourceManager:
             return fn(streams, self.catalog, previous=previous)
         return fn(streams, self.catalog)
 
+    def plan_mixed(self, streams: Sequence[Stream], multipliers,
+                   previous: Optional[Plan] = None, config=None):
+        """Mixed on-demand/spot planning (see :mod:`repro.core.markets`):
+        pack under the per-class on-demand floor and the spot anti-affinity
+        rule, at current spot prices (``multipliers`` maps region ->
+        spot/on-demand price ratio). With ``previous``, replans are
+        min-migration repairs of the mixed plan. Returns a
+        :class:`~repro.core.markets.MixedResult`."""
+        from repro.core.markets import MixedConfig, mixed_plan
+        return mixed_plan(streams, self.catalog, multipliers,
+                          previous=previous, config=config or MixedConfig())
+
     def plan_or_fail(self, streams: Sequence[Stream], strategy: str,
                      target_fps: Optional[float] = None):
         """Like plan() but returns None on infeasibility (Fig. 3 'Fail' cells)."""

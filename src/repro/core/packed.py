@@ -238,6 +238,72 @@ def build_packed_items(streams, choices, metas, target_fps,
     return problem
 
 
+def augment_problem_with_spot(base: Problem,
+                              multipliers) -> Problem:
+    """The mixed-market problem: ``base`` plus a spot twin of every choice
+    whose region has a spot multiplier (same capacity and requirements,
+    price = list price x multiplier, ``market="spot"``).
+
+    Item requirement tuples are extended *preserving class sharing*: all
+    items that shared one requirements tuple in ``base`` (the packed
+    builder's class structure) share one extended tuple here, so
+    ``Problem.__post_init__`` still validates O(classes x choices) and the
+    repair planner's vectorized overfull pre-screen stays usable. When the
+    base problem carries packed arrays, the augmented one gets them too —
+    requirement/compat columns tiled onto the spot choices, prices from the
+    spot quotes — so ``keep_and_evict`` runs its fast path on mixed plans.
+    """
+    from repro.core.packing import Choice
+
+    spot_choices: list[Choice] = []
+    spot_src: list[int] = []                 # base choice index of each twin
+    for c, ch in enumerate(base.choices):
+        m = multipliers.get(ch.location)
+        if m is None:
+            continue
+        spot_choices.append(Choice(
+            key=ch.key + "!spot", type_name=ch.type_name,
+            location=ch.location, capacity=ch.capacity,
+            price=ch.price * m, has_gpu=ch.has_gpu, market="spot"))
+        spot_src.append(c)
+    if not spot_choices:
+        return base
+
+    extended: dict[int, tuple] = {}          # id(base tuple) -> shared tuple
+    items = []
+    for it in base.items:
+        reqs = extended.get(id(it.requirements))
+        if reqs is None:
+            reqs = it.requirements + tuple(
+                it.requirements[c] for c in spot_src)
+            extended[id(it.requirements)] = reqs
+        items.append(Item(key=it.key, requirements=reqs))
+    problem = Problem(choices=base.choices + tuple(spot_choices),
+                      items=tuple(items))
+
+    pp = get_packed(base)
+    if pp is not None:
+        src = np.asarray(spot_src, dtype=np.int64)
+        capacity = np.concatenate([pp.capacity, pp.capacity[src]])
+        prices = np.concatenate(
+            [pp.prices, np.array([c.price for c in spot_choices])])
+        class_req = np.concatenate([pp.class_req, pp.class_req[:, src]],
+                                   axis=1)
+        compat = np.concatenate([pp.class_compat, pp.class_compat[:, src]],
+                                axis=1)
+        kmax = np.concatenate([pp.class_kmax, pp.class_kmax[:, src]], axis=1)
+        group_req = np.concatenate([pp.group_req, pp.group_req[:, src]],
+                                   axis=1)
+        aug = PackedProblem(
+            item_class=pp.item_class, class_req=class_req,
+            class_compat=compat, class_has_compat=compat.any(axis=1),
+            class_size=pp.class_size, class_kmax=kmax,
+            capacity=capacity, prices=prices,
+            class_group=pp.class_group, group_req=group_req)
+        object.__setattr__(problem, "packed", aug)
+    return problem
+
+
 # ---------------------------------------------------------------------------
 # Packed FFD
 # ---------------------------------------------------------------------------

@@ -30,6 +30,9 @@ class Choice:
     capacity: tuple[float, ...]   # usable capacity (90%-capped)
     price: float                  # $/hour at this location
     has_gpu: bool = False         # carried from the catalog's InstanceType
+    market: str = "ondemand"      # "ondemand", or "spot" for the market
+                                  # twins built by core.markets (same
+                                  # capacity, spot-walk price, reclaimable)
 
 
 @dataclasses.dataclass(frozen=True)

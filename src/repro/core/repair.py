@@ -200,6 +200,21 @@ def _keep_and_evict(previous: Plan, problem: Problem):
     return kept, kept_used, kept_origin, old_bin_of, evicted, departures
 
 
+# Public aliases: the mixed-market planner (core/markets.py) repairs mixed
+# plans with exactly this keep/evict pass and migration accounting — the
+# eviction order, origin tracking, and packed pre-screen are shared, only
+# the delta packing differs (market floor + anti-affinity rules).
+def keep_and_evict(previous: Plan, problem: Problem):
+    """See :func:`_keep_and_evict` — the repair planner's keep/evict pass."""
+    return _keep_and_evict(previous, problem)
+
+
+def final_moves(bins: Sequence[Bin], origins: Sequence[Optional[int]],
+                old_bin_of: dict[int, int]) -> int:
+    """See :func:`_final_moves` — the true migration count of a repair."""
+    return _final_moves(bins, origins, old_bin_of)
+
+
 def _final_moves(bins: Sequence[Bin], origins: Sequence[Optional[int]],
                  old_bin_of: dict[int, int]) -> int:
     """Streams whose final bin differs from the old bin that held them —

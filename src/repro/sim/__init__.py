@@ -10,6 +10,8 @@ per-tick cost/SLO accounting calibrated from serving measurements
 from repro.sim.autoscaler import (PredictiveEWMAPolicy, ReactivePolicy,
                                   RepairPolicy, ScheduledPolicy,
                                   StaticPeakPolicy)
+from repro.sim.bidding import (FixedMarginBid, LookaheadBid, PercentileBid,
+                               SpotBidPolicy)
 from repro.sim.cluster import Cluster, SimInstance, SpotMarket
 from repro.sim.demand import (CameraSpec, DiurnalFleet, FlashCrowd, MixShift,
                               PoissonChurn, peak_streams, rush_hour_fps)
@@ -20,9 +22,10 @@ from repro.sim.scenarios import SCENARIOS, Scenario
 
 __all__ = [
     "CameraSpec", "Cluster", "DiurnalFleet", "Event", "EventQueue",
-    "FlashCrowd", "FleetSimulator", "Ledger", "MixShift", "PoissonChurn",
+    "FixedMarginBid", "FlashCrowd", "FleetSimulator", "Ledger",
+    "LookaheadBid", "MixShift", "PercentileBid", "PoissonChurn",
     "PredictiveEWMAPolicy", "ReactivePolicy", "RepairPolicy", "SCENARIOS",
-    "Scenario", "ScheduledPolicy", "ServiceCalibration", "SimConfig", "SimInstance",
-    "SpotMarket", "StaticPeakPolicy", "TickRecord", "peak_streams",
-    "rush_hour_fps",
+    "Scenario", "ScheduledPolicy", "ServiceCalibration", "SimConfig",
+    "SimInstance", "SpotBidPolicy", "SpotMarket", "StaticPeakPolicy",
+    "TickRecord", "peak_streams", "rush_hour_fps",
 ]

@@ -19,6 +19,11 @@ for the demand we see right now?* All of them delegate the actual packing to
   repair planner (``core/repair.py``): feasible placements stay put, only
   the delta re-packs, and a defrag escape hatch bounds the cost drift.
 
+``SpotBidPolicy`` (in :mod:`repro.sim.bidding`) extends the family with
+mixed on-demand/spot planning: per-region bids against the price walk, an
+on-demand floor per stream class, and replica anti-affinity across spot
+markets.
+
 A spot preemption reaches a policy as ``decide(..., preempted=True)``; the
 adaptive policies force a replan, which replays the orphaned streams onto
 live capacity.

@@ -14,10 +14,9 @@ from typing import Iterable, Optional
 
 import numpy as np
 
+# canonical market names live in core (the planner labels bins with them)
+from repro.core.markets import ONDEMAND, SPOT, SPOT_KEY_SUFFIX
 from repro.core.strategies import Plan
-
-ONDEMAND = "ondemand"
-SPOT = "spot"
 
 
 @dataclasses.dataclass
@@ -33,6 +32,8 @@ class SimInstance:
     ready_t: float = 0.0              # boot_t + boot delay (service start)
     terminated_t: Optional[float] = None
     preempted: bool = False
+    bid: Optional[float] = None       # spot bid, $/h; None = legacy spot
+                                      # (hazard-governed) or on-demand
 
     def _overlap(self, start: float, t0: float, t1: float) -> float:
         end = self.terminated_t if self.terminated_t is not None else math.inf
@@ -71,9 +72,22 @@ class SpotMarket:
         self._walk = {r: 1.0 for r in sorted(regions)}
         self._rng = np.random.default_rng(seed)
         self._preempt_rng = np.random.default_rng(seed + 7919)
+        # full multiplier history, one snapshot per step(): the
+        # exogenous-prices fixture — two policies under one seed must
+        # observe identical series (tests/test_markets_properties.py)
+        self.price_history: list[dict[str, float]] = [self.multipliers()]
 
     def multiplier(self, region: str) -> float:
         return self.discount * self._walk.get(region, 1.0)
+
+    def multipliers(self) -> dict[str, float]:
+        """Current spot/on-demand price ratio per region (the planner's
+        view of the market; feeds ``core.markets.quotes``)."""
+        return {r: self.discount * w for r, w in sorted(self._walk.items())}
+
+    def spot_rate(self, inst: SimInstance) -> float:
+        """Current spot $/hour for an instance (list price x multiplier)."""
+        return inst.price * self.multiplier(inst.location)
 
     def step(self, dt_h: float) -> None:
         """Advance every region's price walk by dt hours."""
@@ -82,6 +96,7 @@ class SpotMarket:
             self._walk[r] = float(np.clip(
                 self._walk[r] * math.exp(self._rng.normal(0.0, sigma)),
                 0.5, 2.5))
+        self.price_history.append(self.multipliers())
 
     def draw_preemptions(self, t: float, dt_h: float,
                          spot_instances: Iterable[SimInstance]
@@ -91,15 +106,36 @@ class SpotMarket:
         Preemption probability over the interval follows an exponential
         hazard scaled by the price walk: when the region's spot price runs
         hot, reclaims are more likely — the classic spot failure mode.
+
+        Bid-carrying instances are skipped entirely: their reclaims are a
+        deterministic function of bid vs price (:meth:`outbid`) and must
+        consume no randomness — otherwise how many bids a policy holds
+        would shift the preemption draws of the legacy hazard instances,
+        breaking ledger comparability across policies under one seed.
         """
         out: list[tuple[float, str]] = []
         for inst in spot_instances:
+            if inst.bid is not None:
+                continue
             hazard = self.hazard_per_h * self._walk.get(inst.location, 1.0)
             p = 1.0 - math.exp(-hazard * dt_h)
             if self._preempt_rng.random() < p:
                 out.append((t + float(self._preempt_rng.uniform(0.0, dt_h)),
                             inst.instance_id))
         return out
+
+    def outbid(self, spot_instances: Iterable[SimInstance]
+               ) -> list[str]:
+        """Instance ids whose bid the market just rose above.
+
+        The market preempts *exactly* the underwater instances: bid >=
+        current spot price means the instance survives the whole interval
+        — guaranteed, not probabilistic (property-tested). Deterministic:
+        consumes no randomness, so prices and preemption draws stay
+        exogenous to the bidding policy."""
+        return [inst.instance_id for inst in spot_instances
+                if inst.bid is not None
+                and self.spot_rate(inst) > inst.bid + 1e-12]
 
 
 class Cluster:
@@ -128,14 +164,19 @@ class Cluster:
     # -- lifecycle -----------------------------------------------------------
 
     def _boot(self, t: float, choice_key: str, type_name: str, location: str,
-              price: float) -> SimInstance:
+              price: float, market: Optional[str] = None,
+              bid: Optional[float] = None) -> SimInstance:
+        if market is None:
+            # legacy mode: the market is drawn per boot (spot_fraction);
+            # market-aware plans pass it explicitly and consume no RNG
+            market = SPOT if (self.spot_fraction > 0 and
+                              self._rng.random() < self.spot_fraction) \
+                else ONDEMAND
         self._counter += 1
-        market = SPOT if (self.spot_fraction > 0 and
-                          self._rng.random() < self.spot_fraction) else ONDEMAND
         inst = SimInstance(
             instance_id=f"{choice_key}#{self._counter}",
             type_name=type_name, location=location, price=price,
-            market=market, boot_t=t, ready_t=t + self.boot_delay_h)
+            market=market, boot_t=t, ready_t=t + self.boot_delay_h, bid=bid)
         self.instances[inst.instance_id] = inst
         return inst
 
@@ -150,7 +191,8 @@ class Cluster:
             inst.preempted = preempted or inst.preempted
 
     def reconcile(self, t: float, plan: Plan,
-                  drain_h: float = 0.0) -> dict[str, str]:
+                  drain_h: float = 0.0,
+                  bids: Optional[dict] = None) -> dict[str, str]:
         """Make the physical fleet match the plan; map streams to instances.
 
         Matching is *sticky*: a bin goes to the live instance of its (type,
@@ -163,7 +205,23 @@ class Cluster:
         drain for ``drain_h`` before terminating (make-before-break: the old
         placement keeps serving while replacements boot — billed, like any
         lame-duck VM). Returns ``{stream_id: instance_id}`` for the ledger.
+
+        ``bids`` switches on market-aware reconciliation for mixed plans
+        (bins labeled via ``Choice.market``): instances are matched within
+        their market (a spot rental never serves an on-demand bin), spot
+        bins boot SPOT instances carrying the policy's ``(type_name,
+        location)`` bid, and no boot consumes market RNG. The instance's
+        ``price`` stays the on-demand list price — spot billing applies the
+        market multiplier at accrual time, and the bid only controls
+        reclaims.
         """
+        market_aware = bids is not None
+        ondemand_ref: dict[tuple[str, str], float] = {}
+        if market_aware:
+            for c in plan.problem.choices:
+                if c.market == ONDEMAND:
+                    ondemand_ref[(c.type_name, c.location)] = c.price
+
         by_key: dict[str, list] = {}
         for b in plan.solution.bins:
             ch = plan.problem.choices[b.choice]
@@ -172,6 +230,8 @@ class Cluster:
         live_by_key: dict[str, list[SimInstance]] = {}
         for inst in self.live():
             key = f"{inst.type_name}@{inst.location}"
+            if market_aware and inst.market == SPOT:
+                key += SPOT_KEY_SUFFIX
             live_by_key.setdefault(key, []).append(inst)
         for insts in live_by_key.values():
             insts.sort(key=lambda i: (i.boot_t, i.instance_id))
@@ -205,8 +265,18 @@ class Cluster:
             free = [inst for m, inst in enumerate(have) if m not in taken]
             for n, (b, ch) in enumerate(bins):
                 inst = matched_bin.get(n)
-                if inst is None:
-                    inst = free.pop(0) if free else self._boot(
+                if inst is None and free:
+                    inst = free.pop(0)
+                elif inst is None and market_aware:
+                    ref = ondemand_ref.get((ch.type_name, ch.location),
+                                           ch.price)
+                    inst = self._boot(
+                        t, ch.key, ch.type_name, ch.location, ref,
+                        market=ch.market,
+                        bid=(bids.get((ch.type_name, ch.location))
+                             if ch.market == SPOT else None))
+                elif inst is None:
+                    inst = self._boot(
                         t, ch.key, ch.type_name, ch.location, ch.price)
                 for i in b.items:
                     assignment[plan.problem.items[i].key] = inst.instance_id
@@ -223,14 +293,19 @@ class Cluster:
 
     def accrue(self, t0: float, t1: float,
                market: Optional[SpotMarket] = None
-               ) -> tuple[float, dict[tuple[str, str, str], float]]:
+               ) -> tuple[float, dict[tuple[str, str, str], float],
+                          dict[str, float]]:
         """Cost and instance-hours accrued over [t0, t1).
 
-        Spot instances bill at the market's current multiplier; on-demand at
-        the catalog price. Returns (dollars, {(location, type, market): h}).
+        Spot instances bill at the market's current multiplier (you pay the
+        market price, never your bid); on-demand at the catalog price.
+        Returns (dollars, {(location, type, market): hours},
+        {market: dollars}) — the last is the ledger's spot vs on-demand
+        spend split.
         """
         cost = 0.0
         hours: dict[tuple[str, str, str], float] = {}
+        by_market: dict[str, float] = {ONDEMAND: 0.0, SPOT: 0.0}
         # dict insertion order (boot order) is deterministic; skipping
         # long-terminated instances keeps per-tick billing O(live + recent)
         for inst in self.instances.values():
@@ -243,6 +318,7 @@ class Cluster:
             if inst.market == SPOT and market is not None:
                 rate *= market.multiplier(inst.location)
             cost += rate * h
+            by_market[inst.market] = by_market.get(inst.market, 0.0) + rate * h
             k = (inst.location, inst.type_name, inst.market)
             hours[k] = hours.get(k, 0.0) + h
-        return cost, hours
+        return cost, hours, by_market

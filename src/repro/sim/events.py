@@ -18,6 +18,10 @@ from typing import Any, Optional
 # Event kinds
 TICK = "tick"                  # control-loop boundary: demand + plan + account
 PREEMPT = "preempt"            # the spot market reclaimed an instance
+                               # (hazard draw on a legacy spot rental)
+OUTBID = "outbid"              # the spot price rose above an instance's bid
+                               # — the deterministic reclaim of bid-carrying
+                               # rentals (see SpotMarket.outbid)
 END = "end"                    # end of simulation horizon
 
 

@@ -26,7 +26,7 @@ from typing import Optional
 
 from repro.core.catalog import Catalog
 from repro.sim import events as ev
-from repro.sim.cluster import Cluster, SpotMarket
+from repro.sim.cluster import ONDEMAND, SPOT, Cluster, SpotMarket
 from repro.sim.demand import DemandModel
 from repro.sim.ledger import Ledger, ServiceCalibration, TickRecord
 
@@ -75,6 +75,12 @@ class FleetSimulator:
                                  hazard_per_h=config.preempt_hazard_per_h,
                                  seed=config.seed + 2)
         self.ledger = Ledger()
+        # bidding policies observe the market (prices are exogenous: the
+        # walk never depends on what any policy rents or bids) and the
+        # control-loop timing their preemption-penalty models price against
+        attach = getattr(policy, "attach_market", None)
+        if attach is not None:
+            attach(self.market, config.dt_h, config.boot_delay_h)
 
     def run(self) -> Ledger:
         cfg = self.config
@@ -98,9 +104,11 @@ class FleetSimulator:
         adaptive = getattr(self.policy, "adaptive", None)
         events_seen = 0
 
+        outbids_this_interval = 0
+
         while q:
             e = q.pop()
-            if e.kind == ev.PREEMPT:
+            if e.kind in (ev.PREEMPT, ev.OUTBID):
                 inst = self.cluster.instances.get(e.payload)
                 if inst is not None and (inst.terminated_t is None
                                          or inst.terminated_t > e.time):
@@ -108,6 +116,8 @@ class FleetSimulator:
                                            preempted=True)
                     preempted_since_decide += 1
                     preemptions_this_interval += 1
+                    if e.kind == ev.OUTBID:
+                        outbids_this_interval += 1
                 continue
             if e.kind not in (ev.TICK, ev.END):
                 continue
@@ -118,8 +128,10 @@ class FleetSimulator:
                               prev_assignment, prev_fps,
                               preemptions_this_interval,
                               migrations_this_interval,
-                              defrags_this_interval)
+                              defrags_this_interval,
+                              outbids_this_interval)
                 preemptions_this_interval = 0
+                outbids_this_interval = 0
                 prev_t = t
             if e.kind == ev.END:
                 break
@@ -137,8 +149,9 @@ class FleetSimulator:
                     1 for e in new_events if getattr(e, "defrag", False))
             else:
                 defrags_this_interval = 0
-            assignment = self.cluster.reconcile(t, plan,
-                                                drain_h=cfg.boot_delay_h)
+            assignment = self.cluster.reconcile(
+                t, plan, drain_h=cfg.boot_delay_h,
+                bids=getattr(self.policy, "bids", None))
             # physical migrations: streams whose instance changed, including
             # preemption replays that a plan-level diff cannot see (the new
             # plan may be structurally identical while the orphaned streams
@@ -154,11 +167,18 @@ class FleetSimulator:
                 for when, iid in self.market.draw_preemptions(
                         t, cfg.dt_h, self.cluster.live_spot()):
                     q.push(when, ev.PREEMPT, iid)
+            # deterministic bid-based reclaims: the walk just set the price
+            # for [t, t + dt); every bid now underwater is reclaimed when
+            # the price path crosses it mid-interval. Consumes no RNG, so
+            # legacy hazard draws and the walk stay policy-independent.
+            for iid in self.market.outbid(self.cluster.live_spot()):
+                q.push(t + 0.5 * cfg.dt_h, ev.OUTBID, iid)
         return self.ledger
 
     def _account(self, t0: float, t1: float, streams, assignment,
                  prev_assignment, prev_fps, preemptions: int,
-                 migrations: int, defrags: int = 0) -> None:
+                 migrations: int, defrags: int = 0,
+                 outbids: int = 0) -> None:
         """Frames and dollars for [t0, t1).
 
         While a stream's planned instance is still booting, its *previous*
@@ -188,11 +208,14 @@ class FleetSimulator:
             if self.calibration is not None:
                 a = min(a, self.calibration.frame_rate_cap(s.stream_id) * dt_s)
             analyzed += a
-        cost, hours = self.cluster.accrue(t0, t1, self.market)
+        cost, hours, by_market = self.cluster.accrue(t0, t1, self.market)
         self.ledger.add_tick(TickRecord(
             t=t0, cost=cost, frames_demanded=demanded,
             frames_analyzed=analyzed, frames_dropped=demanded - analyzed,
             migrations=migrations, preemptions=preemptions,
             instances_live=len(self.cluster.live()), streams=len(streams),
             defrags=defrags,
+            cost_ondemand=by_market.get(ONDEMAND, 0.0),
+            cost_spot=by_market.get(SPOT, 0.0),
+            outbids=outbids,
         ), hours)

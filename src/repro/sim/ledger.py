@@ -75,6 +75,9 @@ class TickRecord:
     instances_live: int           # live instances at the decision point
     streams: int                  # demanded streams at the decision point
     defrags: int = 0              # repair-mode full-replan escape hatches
+    cost_ondemand: float = 0.0    # $ of `cost` billed at on-demand prices
+    cost_spot: float = 0.0        # $ of `cost` billed at spot prices
+    outbids: int = 0              # of `preemptions`: bids the price rose over
 
 
 class Ledger:
@@ -127,6 +130,18 @@ class Ledger:
     def defrags(self) -> int:
         return sum(r.defrags for r in self.records)
 
+    @property
+    def cost_ondemand(self) -> float:
+        return sum(r.cost_ondemand for r in self.records)
+
+    @property
+    def cost_spot(self) -> float:
+        return sum(r.cost_spot for r in self.records)
+
+    @property
+    def outbids(self) -> int:
+        return sum(r.outbids for r in self.records)
+
     def slo_attainment(self) -> float:
         """Fraction of demanded frames actually analyzed on time."""
         d = self.frames_demanded
@@ -145,12 +160,15 @@ class Ledger:
         return {
             "ticks": len(self.records),
             "total_cost": round(self.total_cost, 6),
+            "cost_ondemand": round(self.cost_ondemand, 6),
+            "cost_spot": round(self.cost_spot, 6),
             "frames_demanded": round(self.frames_demanded, 6),
             "frames_analyzed": round(self.frames_analyzed, 6),
             "frames_dropped": round(self.frames_dropped, 6),
             "slo_attainment": round(self.slo_attainment(), 6),
             "migrations": self.migrations,
             "preemptions": self.preemptions,
+            "outbids": self.outbids,
             "defrags": self.defrags,
             "instance_hours": {"/".join(k): round(v, 6)
                                for k, v in sorted(self.instance_hours.items())},

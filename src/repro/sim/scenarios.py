@@ -157,6 +157,41 @@ def churn_storm(n_streams: int = 72, duration_h: float = 24.0,
                     "source at once (min-migration stress test)")
 
 
+def _replicated(specs: Sequence[CameraSpec], replicas: int = 2
+                ) -> tuple[CameraSpec, ...]:
+    """Each camera spec split into ``replicas`` load-sharing replicas
+    (``sid#0``, ``sid#1``, ... at 1/replicas of the rate). Replica groups
+    are what the mixed planner's anti-affinity rule keeps off any single
+    spot market — one region's reclaim can only take one replica down."""
+    out = []
+    for c in specs:
+        for k in range(replicas):
+            out.append(dataclasses.replace(
+                c, stream_id=f"{c.stream_id}#{k}",
+                base_fps=round(c.base_fps / replicas, 6),
+                peak_fps=round(c.peak_fps / replicas, 6)))
+    return tuple(out)
+
+
+def spot_bidder(n_streams: int = 108, duration_h: float = 24.0,
+                seed: int = 0) -> Scenario:
+    """Rush-hour demand served by 2x replicated streams with *no* random
+    spot boots (``spot_fraction=0``): all spot capacity comes from a
+    bidding policy's mixed plans, reclaimed exactly when the price walk
+    rises above a bid. The scenario for ``SpotBidPolicy`` +
+    ``benchmarks/spot_bidding.py`` — with a plain policy it runs fully
+    on-demand (the cost baseline)."""
+    base = _fleet(US_CAMERAS, max(1, n_streams // 2))
+    return Scenario(
+        name="spot_bidder",
+        demand=DiurnalFleet(_replicated(base, replicas=2)),
+        config=SimConfig(duration_h=duration_h, seed=seed,
+                         spot_fraction=0.0),
+        description="replicated rush-hour fleet; spot capacity only via "
+                    "bids against the price walk (anti-affinity keeps a "
+                    "stream's replicas off any one spot market)")
+
+
 def mega_city(n_streams: int = 10_000, duration_h: float = 24.0,
               seed: int = 0) -> Scenario:
     """Fleet-scale stress test: 10k cameras worldwide (the 12 cities map to
@@ -187,4 +222,5 @@ SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "flash_crowd": flash_crowd,
     "churn_storm": churn_storm,
     "mega_city": mega_city,
+    "spot_bidder": spot_bidder,
 }

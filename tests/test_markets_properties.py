@@ -1,0 +1,346 @@
+"""Property tests for the spot-market/bidding subsystem (core/markets.py,
+sim/bidding.py, and the market-aware cluster).
+
+``hypothesis`` is optional (see DESIGN.md, Testing): when missing, seeded
+random fleets and walks exercise the same invariants.
+
+* bid >= price => never preempted that tick: ``SpotMarket.outbid`` reclaims
+  *exactly* the underwater instances, nothing else, with no randomness;
+* anti-affinity: no stream's replicas co-resident on one spot market —
+  after a fresh mixed plan, after min-migration mixed repairs under churn,
+  and on every per-tick plan of a simulated preemption storm;
+* a mixed plan never costs more per hour than the on-demand-only plan of
+  the same problem;
+* frames are conserved (demanded == analyzed + dropped, every tick) under
+  mass preemption, and preempted capacity is replayed;
+* the price walk is exogenous: two simulators under one seed observe the
+  identical price series regardless of bidding policy (the RNG-split
+  guarantee — bid-based reclaims consume no randomness).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import MixedConfig, ResourceManager, Stream, fig6_catalog
+from repro.core import geo
+from repro.core.markets import (MarketQuote, SPOT, mixed_plan, quotes,
+                                replica_group, spot_affinity_violations)
+from repro.core.workload import PROGRAMS
+from repro.sim import (FixedMarginBid, FleetSimulator, LookaheadBid,
+                       ReactivePolicy, RepairPolicy, SCENARIOS,
+                       SpotBidPolicy)
+from repro.sim.cluster import SimInstance, SpotMarket
+
+CAMERAS = tuple(sorted(geo.CAMERAS))
+CATALOG = fig6_catalog()
+
+
+def _replicated_fleet(rng, n_groups: int, replicas: int = 2) -> list[Stream]:
+    out = []
+    for i in range(n_groups):
+        cam = CAMERAS[int(rng.integers(0, len(CAMERAS)))]
+        prog = "VGG16" if rng.random() < 0.25 else "ZF"
+        hi = 1.5 if prog == "VGG16" else 6.0
+        fps = round(float(rng.uniform(0.2, hi)) / replicas, 3)
+        for k in range(replicas):
+            out.append(Stream(f"{prog.lower()}-{i}#{k}", PROGRAMS[prog],
+                              fps, camera=cam))
+    return out
+
+
+def _multipliers(rng) -> dict[str, float]:
+    return {r: round(float(rng.uniform(0.2, 0.9)), 4)
+            for r in CATALOG.locations}
+
+
+# -- bid >= price => never preempted that tick -------------------------------
+
+
+def _check_outbid_is_exactly_underwater(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    market = SpotMarket(CATALOG.locations, seed=seed)
+    for _ in range(int(rng.integers(1, 8))):
+        market.step(1.0)
+    insts = []
+    underwater = set()
+    for j, region in enumerate(CATALOG.locations):
+        price = round(float(rng.uniform(0.3, 3.0)), 3)
+        inst = SimInstance(instance_id=f"i{j}", type_name="t",
+                          location=region, price=price, market=SPOT)
+        rate = market.spot_rate(inst)
+        mode = int(rng.integers(0, 3))
+        if mode == 0:
+            inst.bid = rate                    # bid == price: safe
+        elif mode == 1:
+            inst.bid = rate * float(rng.uniform(1.0, 2.0))   # above: safe
+        else:
+            inst.bid = rate * float(rng.uniform(0.2, 0.999))  # underwater
+            underwater.add(inst.instance_id)
+        insts.append(inst)
+    assert set(market.outbid(insts)) == underwater
+
+
+def test_outbid_reclaims_exactly_the_underwater_bids_seeded():
+    for seed in range(25):
+        _check_outbid_is_exactly_underwater(seed)
+
+
+def test_bid_at_ondemand_cap_is_never_preempted_in_simulation():
+    """The walk's multiplier is clipped below 1.0x on-demand, so a policy
+    bidding the on-demand cap (huge fixed margin) must never be outbid over
+    a whole simulated day — bid >= price at every tick."""
+    sc = SCENARIOS["spot_bidder"](n_streams=24, duration_h=12.0, seed=3)
+    pol = SpotBidPolicy(ResourceManager(sc.catalog()),
+                        bidding=FixedMarginBid(10.0))
+    led = FleetSimulator(sc.demand, pol, sc.catalog(), sc.config).run()
+    assert led.outbids == 0 and led.preemptions == 0
+    assert led.cost_spot > 0, "the mixed plan must actually use spot"
+
+
+# -- anti-affinity invariant -------------------------------------------------
+
+
+def _check_anti_affinity_plan_and_repair(seed: int, n_groups: int) -> None:
+    rng = np.random.default_rng(seed)
+    streams = _replicated_fleet(rng, n_groups)
+    mults = _multipliers(rng)
+    cfg = MixedConfig()
+    res = mixed_plan(streams, CATALOG, mults, config=cfg)
+    assert spot_affinity_violations(res.plan) == []
+
+    # churn: drop some groups, drift rates, add new replica groups
+    survivors = [s for s in streams
+                 if int(rng.integers(0, 5)) > 0]
+    drifted = [dataclasses.replace(
+        s, fps=round(min(s.fps * float(rng.uniform(0.5, 2.0)), 3.0), 3))
+        if rng.random() < 0.5 else s for s in survivors]
+    arrivals = _replicated_fleet(np.random.default_rng(seed + 1), 2)
+    new = drifted + [dataclasses.replace(s, stream_id="new-" + s.stream_id)
+                     for s in arrivals]
+    mults2 = _multipliers(rng)
+    rep = mixed_plan(new, CATALOG, mults2, previous=res.plan, config=cfg)
+    assert spot_affinity_violations(rep.plan) == []
+    # every demanded stream is placed exactly once (validate ran inside,
+    # but coverage against the *demand* is the planner's contract)
+    placed = {rep.plan.problem.items[i].key
+              for b in rep.plan.solution.bins for i in b.items}
+    assert placed == {s.stream_id for s in new}
+    _assert_floor(rep.plan, new, cfg)
+
+
+def _assert_floor(plan, streams, cfg) -> None:
+    """At most (1 - floor_frac) of every class on spot capacity."""
+    spot_items = {i for b in plan.solution.bins
+                  if plan.problem.choices[b.choice].market == SPOT
+                  for i in b.items}
+    by_class: dict[tuple, list[int]] = {}
+    for i, s in enumerate(streams):
+        by_class.setdefault(cfg.stream_class(s), []).append(i)
+    for members in by_class.values():
+        floor = math.ceil(cfg.floor_frac * len(members))
+        on_spot = sum(1 for i in members if i in spot_items)
+        assert on_spot <= len(members) - floor, \
+            "on-demand floor violated after repair"
+
+
+def test_repair_re_establishes_floor_after_replica_departure():
+    """Regression: when a group's on-demand replica departs, the surviving
+    replica becomes the class floor and must be moved *off* spot by the
+    next repair — min-migration never outranks the reclaim-proof floor."""
+    rng = np.random.default_rng(21)
+    # one group per camera so every (program, camera) class is one group:
+    # after the departure each class is a singleton the floor fully covers
+    streams = [Stream(f"zf-{j}#{k}", PROGRAMS["ZF"], 1.5,
+                      camera=CAMERAS[j])
+               for j in range(8) for k in range(2)]
+    cfg = MixedConfig()
+    mults = _multipliers(rng)
+    res = mixed_plan(streams, CATALOG, mults, config=cfg)
+    # drop every '#0' replica: each survivor is now a singleton class whose
+    # floor (ceil(0.5 * 1) = 1) covers it entirely
+    survivors = [s for s in streams if s.stream_id.endswith("#1")]
+    rep = mixed_plan(survivors, CATALOG, mults, previous=res.plan,
+                     config=cfg)
+    spot_keys = {rep.plan.problem.items[i].key
+                 for b in rep.plan.solution.bins
+                 if rep.plan.problem.choices[b.choice].market == SPOT
+                 for i in b.items}
+    assert spot_keys == set(), \
+        f"floored streams left on spot after repair: {sorted(spot_keys)}"
+    _assert_floor(rep.plan, survivors, cfg)
+
+
+def test_anti_affinity_holds_after_plan_and_repair_seeded():
+    for seed in range(15):
+        _check_anti_affinity_plan_and_repair(seed, n_groups=6 + seed % 7)
+
+
+def test_anti_affinity_holds_through_preemption_storm():
+    """Zero-margin bids go underwater whenever a region's walk ticks up —
+    a mass-preemption storm. Every per-tick plan must keep each group's
+    replicas off any single spot market, and the storm must not lose
+    frames (conservation is asserted by the ledger on every tick)."""
+    sc = SCENARIOS["spot_bidder"](n_streams=32, duration_h=24.0, seed=5)
+    cat = sc.catalog()
+    pol = SpotBidPolicy(ResourceManager(cat), bidding=FixedMarginBid(0.0))
+    plans = []
+    orig = pol.adaptive.step
+
+    def recording_step(t, streams, **kw):
+        plan = orig(t, streams, **kw)
+        plans.append(plan)
+        return plan
+
+    pol.adaptive.step = recording_step
+    led = FleetSimulator(sc.demand, pol, cat, sc.config).run()
+    assert led.outbids > 5, "zero-margin bidding must storm"
+    assert plans, "no plans recorded"
+    for plan in plans:
+        assert spot_affinity_violations(plan) == []
+    assert led.slo_attainment() > 0.8
+
+
+# -- mixed cost <= on-demand-only cost ---------------------------------------
+
+
+def _check_mixed_never_beats_itself(seed: int, n_groups: int) -> None:
+    rng = np.random.default_rng(seed)
+    streams = _replicated_fleet(rng, n_groups)
+    mults = _multipliers(rng)
+    res = mixed_plan(streams, CATALOG, mults)
+    assert res.ondemand_cost is not None
+    assert res.plan.hourly_cost <= res.ondemand_cost + 1e-9, \
+        (f"mixed plan ${res.plan.hourly_cost}/h costs more than "
+         f"on-demand-only ${res.ondemand_cost}/h")
+    # the floor really holds: at most (1 - floor_frac) of each class on spot
+    spot_items = {i for b in res.plan.solution.bins
+                  if res.plan.problem.choices[b.choice].market == SPOT
+                  for i in b.items}
+    by_class: dict[tuple, list[int]] = {}
+    cfg = MixedConfig()
+    for i, s in enumerate(streams):
+        by_class.setdefault(cfg.stream_class(s), []).append(i)
+    for members in by_class.values():
+        floor = math.ceil(cfg.floor_frac * len(members))
+        on_spot = sum(1 for i in members if i in spot_items)
+        assert on_spot <= len(members) - floor
+
+
+def test_mixed_cost_never_exceeds_ondemand_only_seeded():
+    for seed in range(15):
+        _check_mixed_never_beats_itself(seed, n_groups=5 + seed % 8)
+
+
+# -- conservation under mass preemption --------------------------------------
+
+
+def test_frames_conserved_under_mass_preemption():
+    sc = SCENARIOS["spot_bidder"](n_streams=24, duration_h=24.0, seed=9)
+    cat = sc.catalog()
+    pol = SpotBidPolicy(ResourceManager(cat), bidding=FixedMarginBid(0.0))
+    led = FleetSimulator(sc.demand, pol, cat, sc.config).run()
+    assert led.outbids > 0 and led.preemptions >= led.outbids
+    for r in led.records:
+        assert r.frames_demanded == pytest.approx(
+            r.frames_analyzed + r.frames_dropped)
+        assert r.cost == pytest.approx(r.cost_ondemand + r.cost_spot)
+    assert led.frames_analyzed > 0
+
+
+# -- exogenous prices: the RNG-split guarantee -------------------------------
+
+
+def test_price_series_identical_across_bidding_policies():
+    """Regression for the walk/preemption RNG split: how many instances a
+    policy rents — and whether its reclaims are hazard draws or bid
+    crossings — must not perturb the price series. Three very different
+    policies under one seed must observe the identical walk, tick for
+    tick."""
+    sc = SCENARIOS["spot_heavy"](n_streams=24, duration_h=12.0, seed=7)
+    cat = sc.catalog()
+    sims = [FleetSimulator(sc.demand, pol, cat, sc.config)
+            for pol in (ReactivePolicy(ResourceManager(cat)),
+                        RepairPolicy(ResourceManager(cat)),
+                        SpotBidPolicy(ResourceManager(cat),
+                                      bidding=LookaheadBid()))]
+    for s in sims:
+        s.run()
+    histories = [s.market.price_history for s in sims]
+    assert histories[0] == histories[1] == histories[2]
+    assert len(histories[0]) == int(sc.config.duration_h) + 1
+
+
+# -- quote math --------------------------------------------------------------
+
+
+def _check_quote_math(price: float, vol: float, dt: float) -> None:
+    q = MarketQuote("t", "r", SPOT, price, price / 0.35, vol)
+    p_lo = q.preempt_probability(price * 1.05, dt)
+    p_hi = q.preempt_probability(price * 1.60, dt)
+    assert 0.0 <= p_hi <= p_lo <= 1.0, "hazard must fall as margin grows"
+    assert q.preempt_probability(price, dt) == pytest.approx(0.5)
+    # expected payment conditional on survival is below the bid and at
+    # least a shade under the current price (truncation pulls it down)
+    for bid in (price * 1.05, price * 1.6):
+        pay = q.expected_payment(bid, dt)
+        assert 0.0 < pay <= bid + 1e-12
+    eff_lo = q.effective_price(price * 1.02, dt, preempt_penalty=price)
+    eff_hi = q.effective_price(price * 1.60, dt, preempt_penalty=price)
+    assert eff_hi <= eff_lo + 1e-9, \
+        "with a preemption penalty, more head-room must not cost more"
+
+
+def test_quote_hazard_and_payment_seeded():
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        _check_quote_math(float(rng.uniform(0.1, 3.0)),
+                          float(rng.uniform(0.05, 0.5)),
+                          float(rng.uniform(0.25, 4.0)))
+
+
+def test_quotes_sheet_covers_both_markets():
+    mults = {"us-east-1": 0.4}
+    sheet = quotes(CATALOG, mults)
+    spot = [q for q in sheet if q.market == SPOT]
+    assert {q.location for q in spot} == {"us-east-1"}
+    for q in spot:
+        assert q.price == pytest.approx(q.ondemand_price * 0.4)
+        assert q.key.endswith("!spot")
+    # on-demand quotes exist for every catalog choice
+    assert len(sheet) == len(CATALOG.choices()) + len(spot)
+
+
+def test_replica_group_parsing():
+    assert replica_group("zf-nyc-3#1") == "zf-nyc-3"
+    assert replica_group("plain-stream") == "plain-stream"
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_outbid_exactly_underwater(seed):
+        _check_outbid_is_exactly_underwater(seed)
+
+    @given(st.integers(0, 10_000), st.integers(4, 12))
+    @settings(max_examples=25, deadline=None)
+    def test_anti_affinity_plan_and_repair(seed, n_groups):
+        _check_anti_affinity_plan_and_repair(seed, n_groups)
+
+    @given(st.integers(0, 10_000), st.integers(4, 12))
+    @settings(max_examples=25, deadline=None)
+    def test_mixed_cost_never_exceeds_ondemand(seed, n_groups):
+        _check_mixed_never_beats_itself(seed, n_groups)
+
+    @given(st.floats(0.1, 3.0), st.floats(0.05, 0.5), st.floats(0.25, 4.0))
+    @settings(max_examples=40, deadline=None)
+    def test_quote_math(price, vol, dt):
+        _check_quote_math(price, vol, dt)
