@@ -38,6 +38,8 @@ _SUITES: list[tuple[str, str, str]] = [
      "replan_churn"),
     ("spot_bidding", "spot bidding: mixed plans vs on-demand-only "
      "(beyond-paper)", "spot_bidding"),
+    ("drift_recalibration", "drift recalibration: online vs stale profile "
+     "(beyond-paper)", "drift_recalibration"),
     ("scale_sweep", "scale sweep: 100/1k/10k streams, packed vs scalar "
      "(beyond-paper)", "scale_sweep"),
     ("kernels", "pallas kernels (interpret-mode validation)",

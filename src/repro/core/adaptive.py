@@ -35,6 +35,8 @@ class AdaptiveEvent:
     hourly_cost: float
     migrations: int
     defrag: bool = False   # repair mode: the full-replan escape hatch fired
+    recalibration: bool = False   # replan forced by a drift-triggered
+                                  # re-profile (obs.RecalibratingPolicy)
 
 
 # A replan trigger decides whether a *still-feasible* plan should even be
@@ -82,10 +84,21 @@ class AdaptiveManager:
 
     current: Optional[Plan] = None
     events: list = dataclasses.field(default_factory=list)
+    # consumed by the next step(): marks its event as recalibration-forced
+    recalibration_pending: bool = dataclasses.field(default=False,
+                                                    repr=False)
 
     def __post_init__(self) -> None:
         if self.strategy == "REPAIR" and self.repair is None:
             self.repair = RepairConfig()
+
+    def flag_recalibration(self) -> None:
+        """Mark the *next* decision as recalibration-triggered (called by
+        ``repro.obs.RecalibratingPolicy`` just before it forces a replan
+        with the re-profiled calibration); the flag is consumed by the
+        event that decision appends, so the trace records which replans
+        the drift detector caused."""
+        self.recalibration_pending = True
 
     def _multipliers(self) -> dict:
         return self.multipliers_fn() if self.multipliers_fn is not None else {}
@@ -152,6 +165,8 @@ class AdaptiveManager:
         ``force=True`` treats the current plan as infeasible regardless of
         capacity (e.g. an instance it relies on was spot-preempted).
         """
+        recal = self.recalibration_pending
+        self.recalibration_pending = False
         if self.current is None:
             # first placement goes through the configured strategy — repair
             # mode only changes how *replans* are computed (with no previous
@@ -166,21 +181,24 @@ class AdaptiveManager:
             # every stream is an arrival, nothing migrates
             self.events.append(AdaptiveEvent(t, "replan",
                                              self.current.hourly_cost,
-                                             migrations=0))
+                                             migrations=0,
+                                             recalibration=recal))
             return self.current
 
         feasible = (not force) and self._plan_feasible_for(self.current, streams)
         if feasible and self.replan_trigger is not None \
                 and not self.replan_trigger(t, streams, self.current):
             self.events.append(AdaptiveEvent(t, "keep",
-                                             self.current.hourly_cost, 0))
+                                             self.current.hourly_cost, 0,
+                                             recalibration=recal))
             return self.current
         candidate, migrations, defrag = self._candidate(streams)
         if not feasible:
             self.current = candidate
             self.events.append(AdaptiveEvent(t, "forced-replan",
                                              candidate.hourly_cost, migrations,
-                                             defrag=defrag))
+                                             defrag=defrag,
+                                             recalibration=recal))
         elif (candidate.hourly_cost
               < self.current.hourly_cost * (1 - self.savings_threshold)) \
                 or (self.mixed is not None and migrations == 0
@@ -190,9 +208,12 @@ class AdaptiveManager:
             # keeps the plan's $/hour honest as the price walk moves
             self.current = candidate
             self.events.append(AdaptiveEvent(t, "replan", candidate.hourly_cost,
-                                             migrations, defrag=defrag))
+                                             migrations, defrag=defrag,
+                                             recalibration=recal))
         else:
-            self.events.append(AdaptiveEvent(t, "keep", self.current.hourly_cost, 0))
+            self.events.append(AdaptiveEvent(t, "keep",
+                                             self.current.hourly_cost, 0,
+                                             recalibration=recal))
         return self.current
 
     def total_cost(self) -> float:

@@ -1,0 +1,41 @@
+"""Observability layer (BEYOND-PAPER): the profile→pack→observe loop, closed.
+
+The paper's manager profiles serving throughput once at startup and packs
+from that calibration forever. This package makes the loop continuous:
+
+* ``metrics``      — :class:`TelemetryHub`, a streaming metric export: the
+                     fleet simulator's event loop pushes per-tick points
+                     (named after OpenTelemetry conventions) to subscribers
+                     *as they happen*, instead of post-hoc ``Ledger`` reads.
+* ``trace``        — :class:`Tracer` / :class:`Span`, per-replan trace
+                     spans (simulated time + wall-clock duration + decision
+                     attributes, nested recalibrate → replan).
+* ``drift``        — :class:`DriftDetector`, comparing measured engine
+                     rates against the active
+                     :class:`~repro.sim.ledger.ServiceCalibration` and
+                     firing when the relative error holds past a threshold
+                     for K consecutive ticks.
+* ``probe``        — :class:`DriftingService`, the simulator's ground-truth
+                     serving rates over time (with injected regressions)
+                     plus the measurement probe a real deployment would get
+                     from ``ContinuousBatchingEngine.windowed_rates()``.
+* ``recalibrate``  — :class:`RecalibratingPolicy`, wrapping any autoscaling
+                     policy: re-profiles on drift and forces a
+                     min-migration repair replan through the existing
+                     ``core/repair.py`` machinery.
+
+``benchmarks/drift_recalibration.py`` gates the outcome: on the
+``drifting_scene`` scenario, online recalibration beats a stale-calibration
+baseline on cost at equal-or-better SLO.
+"""
+from repro.obs.drift import DriftConfig, DriftDetector, DriftVerdict
+from repro.obs.metrics import MetricPoint, TelemetryHub
+from repro.obs.probe import DriftingService, RateShift
+from repro.obs.recalibrate import RecalibratingPolicy
+from repro.obs.trace import Span, Tracer
+
+__all__ = [
+    "DriftConfig", "DriftDetector", "DriftVerdict", "DriftingService",
+    "MetricPoint", "RateShift", "RecalibratingPolicy", "Span",
+    "TelemetryHub", "Tracer",
+]

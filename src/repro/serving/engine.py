@@ -58,13 +58,23 @@ class Request:
 class _EngineStatsMixin:
     """Shared stats accounting (both engines keep a ``stats`` dict with a
     float ``wall_s`` and integer counters including ``tokens_generated``,
-    plus a per-stream token tally behind ``measured_rates``)."""
+    plus per-stream token tallies and active windows behind
+    ``measured_rates``/``windowed_rates``)."""
+
+    def _init_stream_stats(self) -> None:
+        self._stream_tokens: dict[str, int] = {}
+        # per-stream active window [first_seen, last_seen] on the engine
+        # clock (cumulative wall_s): a late joiner's window starts at the
+        # step that first served it, an early leaver's ends at its last
+        self._stream_window: dict[str, list[float]] = {}
+        self._touched: set[str] = set()
+        self._rate_snapshot: tuple[float, dict[str, int]] = (0.0, {})
 
     def reset_stats(self) -> None:
         """Zero the counters (e.g. after a jit warmup run)."""
         self.stats = {k: 0.0 if isinstance(v, float) else 0
                       for k, v in self.stats.items()}
-        self._stream_tokens: dict[str, int] = {}
+        self._init_stream_stats()
 
     def throughput_tokens_per_s(self) -> float:
         if self.stats["wall_s"] == 0:
@@ -74,21 +84,67 @@ class _EngineStatsMixin:
     def _count_stream_token(self, req: Request, n: int = 1) -> None:
         key = req.stream_id or req.request_id
         self._stream_tokens[key] = self._stream_tokens.get(key, 0) + n
+        self._touched.add(key)
+
+    def _mark_windows(self, clock0: float, clock1: float) -> None:
+        """Extend the active window of every stream served this step to
+        cover [clock0, clock1] (engine-clock seconds)."""
+        for key in self._touched:
+            w = self._stream_window.get(key)
+            if w is None:
+                self._stream_window[key] = [clock0, clock1]
+            elif clock1 > w[1]:
+                w[1] = clock1
+        self._touched.clear()
 
     def measured_rates(self) -> dict[str, float]:
-        """Measured tokens/sec per stream over the engine's wall time.
+        """Measured tokens/sec per stream over *that stream's* active window
+        (first-seen to last-seen on the engine clock).
 
         This is the profiling export the paper's manager consumes: feed it to
         ``core.tpu_catalog.streams_from_measured`` (or ``streams_from_engine``)
         to build packing items from observed — not nominal — throughput, and
         to the fleet simulator's ``ServiceCalibration`` to bound how many
         frames a simulated instance can actually analyze.
+
+        Per-stream windows matter: dividing by the engine's *total* wall time
+        systematically under-measures streams that join late or leave early
+        — a drift detector fed such rates chases phantom throughput drops.
+        A stream whose window is empty (all tokens in one step on a clock
+        that did not advance) falls back to the total wall time.
         """
         wall = self.stats["wall_s"]
-        if wall <= 0:
-            return {}
-        return {sid: n / wall
-                for sid, n in sorted(self._stream_tokens.items())}
+        out: dict[str, float] = {}
+        for sid, n in sorted(self._stream_tokens.items()):
+            w = self._stream_window.get(sid)
+            span = (w[1] - w[0]) if w is not None else 0.0
+            if span <= 0.0:
+                span = wall
+            if span <= 0.0:
+                continue
+            out[sid] = n / span
+        return out
+
+    def windowed_rates(self) -> dict[str, float]:
+        """Tokens/sec per stream since the *previous* call (poll-style
+        window over the cumulative counters).
+
+        This is the live telemetry export a drift detector should consume:
+        lifetime averages (``measured_rates``) dilute a throughput
+        regression across the whole history, while successive windows show
+        it at full magnitude immediately. Streams with no tokens in the
+        window are omitted (no data, not zero throughput)."""
+        wall = self.stats["wall_s"]
+        prev_wall, prev_tokens = self._rate_snapshot
+        span = wall - prev_wall
+        out: dict[str, float] = {}
+        if span > 0:
+            for sid, n in sorted(self._stream_tokens.items()):
+                delta = n - prev_tokens.get(sid, 0)
+                if delta > 0:
+                    out[sid] = delta / span
+        self._rate_snapshot = (wall, dict(self._stream_tokens))
+        return out
 
 
 class ServingEngine(_EngineStatsMixin):
@@ -104,7 +160,7 @@ class ServingEngine(_EngineStatsMixin):
         self.queue: list[Request] = []
         self._prefill = make_jitted_prefill(cfg, self.opts, cache_len)
         self._decode = make_jitted_decode(cfg, self.opts)
-        self._stream_tokens: dict[str, int] = {}
+        self._init_stream_stats()
         self.stats = {"requests": 0, "tokens_generated": 0, "batches": 0,
                       "decode_steps": 0, "wall_s": 0.0}
 
@@ -126,6 +182,7 @@ class ServingEngine(_EngineStatsMixin):
         batch_reqs = self.queue[: self.max_batch]
         self.queue = self.queue[len(batch_reqs):]
         t0 = time.monotonic()
+        clock0 = self.stats["wall_s"]
 
         tokens = self._pad_batch(batch_reqs)
         B, L = tokens.shape
@@ -150,6 +207,7 @@ class ServingEngine(_EngineStatsMixin):
             self.stats["requests"] += 1
             self.stats["tokens_generated"] += r.max_new_tokens
             self._count_stream_token(r, r.max_new_tokens)
+        self._mark_windows(clock0, self.stats["wall_s"])
         return list(batch_reqs)
 
     def drain(self) -> list[Request]:
@@ -199,7 +257,7 @@ class ContinuousBatchingEngine(_EngineStatsMixin):
         self._latencies: list[float] = []
         self._slo_hits = 0
         self._occupancy_sum = 0.0
-        self._stream_tokens: dict[str, int] = {}
+        self._init_stream_stats()
         self.stats = {"requests": 0, "tokens_generated": 0, "prefills": 0,
                       "decode_steps": 0, "wall_s": 0.0}
 
@@ -251,6 +309,7 @@ class ContinuousBatchingEngine(_EngineStatsMixin):
         batched decode step for every occupied slot. Returns the requests
         completed this iteration."""
         t0 = time.monotonic()
+        clock0 = self.stats["wall_s"]
         done: list[Request] = []
 
         # 1) admission, earliest deadline first
@@ -287,6 +346,7 @@ class ContinuousBatchingEngine(_EngineStatsMixin):
                     done.append(self._retire(s))
 
         self.stats["wall_s"] += time.monotonic() - t0
+        self._mark_windows(clock0, self.stats["wall_s"])
         return done
 
     def drain(self) -> list[Request]:
@@ -308,9 +368,13 @@ class ContinuousBatchingEngine(_EngineStatsMixin):
         """SLO attainment, latency percentiles, and slot occupancy — the
         scheduler-facing metrics (tokens/s feeds the packing catalog).
 
-        With no completed requests yet the latency fields are ``None`` (there
-        is no percentile of an empty sample) and the counters are zero — the
-        report never raises.
+        With no completed requests yet the latency fields *and*
+        ``slo_attainment`` are ``None`` (there is no percentile — nor an
+        attainment fraction — of an empty sample; reporting 1.0 would feed
+        a drift detector "perfect SLO" from an idle engine) and the
+        counters are zero — the report never raises. Contrast with
+        ``Ledger.slo_attainment()``, which is vacuously 1.0 only under
+        zero *demand* (nothing was asked for, so nothing was missed).
         """
         lat = sorted(self._latencies)
         n = len(lat)
@@ -324,7 +388,7 @@ class ContinuousBatchingEngine(_EngineStatsMixin):
         return {
             "requests": self.stats["requests"],
             "tokens_per_s": self.throughput_tokens_per_s(),
-            "slo_attainment": (self._slo_hits / n) if n else 1.0,
+            "slo_attainment": (self._slo_hits / n) if n else None,
             "p50_latency_s": pct(0.50),
             "p99_latency_s": pct(0.99),
             "slot_occupancy": (self._occupancy_sum / steps) if steps else 0.0,

@@ -142,7 +142,9 @@ class PredictiveEWMAPolicy(ReactivePolicy):
 
     def forecast(self, streams: Sequence[Stream]) -> list[Stream]:
         out = []
+        present = set()
         for s in streams:
+            present.add(s.stream_id)
             prev = self._prev_fps.get(s.stream_id, s.fps)
             trend = s.fps - prev
             ewma = ((1 - self.alpha) * self._trend.get(s.stream_id, 0.0)
@@ -152,6 +154,13 @@ class PredictiveEWMAPolicy(ReactivePolicy):
             f = max(s.fps, s.fps + ewma * self.lead_ticks)
             out.append(dataclasses.replace(
                 s, fps=round(min(f, self.cap_fps), 3)))
+        # evict state for departed streams: a churned-out camera that later
+        # rejoins must start a fresh trend (not inherit a stale one), and
+        # state must stay bounded by the live fleet under heavy churn
+        for sid in list(self._prev_fps):
+            if sid not in present:
+                del self._prev_fps[sid]
+                self._trend.pop(sid, None)
         return out
 
     def decide(self, t: float, streams: Sequence[Stream], *,

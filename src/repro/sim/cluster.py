@@ -142,13 +142,17 @@ class Cluster:
     """Tracks rented instances and reconciles them against each new plan."""
 
     def __init__(self, *, boot_delay_h: float = 0.05,
-                 spot_fraction: float = 0.0, seed: int = 0) -> None:
+                 spot_fraction: float = 0.0, seed: int = 0,
+                 telemetry=None) -> None:
         self.boot_delay_h = boot_delay_h
         self.spot_fraction = spot_fraction
         self.instances: dict[str, SimInstance] = {}
         self._counter = 0
         self._rng = np.random.default_rng(seed)
         self._prev_assignment: dict[str, str] = {}   # stream_id -> instance_id
+        # optional obs.TelemetryHub: lifecycle events stream out as metric
+        # points (cluster.instance.boot / .terminate); None = zero overhead
+        self.telemetry = telemetry
 
     # -- queries -------------------------------------------------------------
 
@@ -178,6 +182,11 @@ class Cluster:
             type_name=type_name, location=location, price=price,
             market=market, boot_t=t, ready_t=t + self.boot_delay_h, bid=bid)
         self.instances[inst.instance_id] = inst
+        if self.telemetry is not None:
+            self.telemetry.emit(t, "cluster.instance.boot", 1.0,
+                                instance=inst.instance_id,
+                                type=type_name, location=location,
+                                market=market)
         return inst
 
     def terminate(self, instance_id: str, t: float,
@@ -187,8 +196,16 @@ class Cluster:
         drain — wins; a later one never extends a lifetime."""
         inst = self.instances[instance_id]
         if inst.terminated_t is None or t < inst.terminated_t:
+            first = inst.terminated_t is None
             inst.terminated_t = t
             inst.preempted = preempted or inst.preempted
+            if self.telemetry is not None and first:
+                self.telemetry.emit(t, "cluster.instance.terminate", 1.0,
+                                    instance=inst.instance_id,
+                                    type=inst.type_name,
+                                    location=inst.location,
+                                    market=inst.market,
+                                    preempted=str(inst.preempted))
 
     def reconcile(self, t: float, plan: Plan,
                   drain_h: float = 0.0,

@@ -61,14 +61,24 @@ class FleetSimulator:
 
     def __init__(self, demand: DemandModel, policy, catalog: Catalog,
                  config: SimConfig = SimConfig(),
-                 calibration: Optional[ServiceCalibration] = None) -> None:
+                 calibration: Optional[ServiceCalibration] = None,
+                 service=None, telemetry=None) -> None:
         self.demand = demand
         self.policy = policy
         self.config = config
         self.calibration = calibration
+        # ``service`` is the *ground truth* serving capacity
+        # (obs.DriftingService): when set, it caps analyzed frames instead of
+        # the policy's believed calibration — the truth-vs-belief split that
+        # lets a stale calibration overpay without over-serving.
+        self.service = service
+        # ``telemetry`` (obs.TelemetryHub) receives streaming per-tick metric
+        # points from the event loop; None = zero overhead.
+        self.telemetry = telemetry
         self.cluster = Cluster(boot_delay_h=config.boot_delay_h,
                                spot_fraction=config.spot_fraction,
-                               seed=config.seed + 1)
+                               seed=config.seed + 1,
+                               telemetry=telemetry)
         self.market = SpotMarket(catalog.locations,
                                  discount=config.spot_discount,
                                  volatility=config.spot_volatility,
@@ -99,6 +109,8 @@ class FleetSimulator:
         preemptions_this_interval = 0
         migrations_this_interval = 0
         defrags_this_interval = 0
+        calib_err_this_interval = 0.0
+        recals_this_interval = 0
         # adaptive policies expose their decision trace; the ledger records
         # when the repair planner's defrag escape hatch fired
         adaptive = getattr(self.policy, "adaptive", None)
@@ -129,7 +141,9 @@ class FleetSimulator:
                               preemptions_this_interval,
                               migrations_this_interval,
                               defrags_this_interval,
-                              outbids_this_interval)
+                              outbids_this_interval,
+                              calib_err_this_interval,
+                              recals_this_interval)
                 preemptions_this_interval = 0
                 outbids_this_interval = 0
                 prev_t = t
@@ -147,8 +161,17 @@ class FleetSimulator:
                 events_seen = len(adaptive.events)
                 defrags_this_interval = sum(
                     1 for e in new_events if getattr(e, "defrag", False))
+                recals_this_interval = sum(
+                    1 for e in new_events
+                    if getattr(e, "recalibration", False))
             else:
                 defrags_this_interval = 0
+                recals_this_interval = 0
+            # drift-aware policies publish the verdict of the probe they
+            # just took; the ledger gets the calibration error column
+            verdict = getattr(self.policy, "last_drift", None)
+            calib_err_this_interval = (verdict.rel_error
+                                       if verdict is not None else 0.0)
             assignment = self.cluster.reconcile(
                 t, plan, drain_h=cfg.boot_delay_h,
                 bids=getattr(self.policy, "bids", None))
@@ -178,7 +201,8 @@ class FleetSimulator:
     def _account(self, t0: float, t1: float, streams, assignment,
                  prev_assignment, prev_fps, preemptions: int,
                  migrations: int, defrags: int = 0,
-                 outbids: int = 0) -> None:
+                 outbids: int = 0, calib_err: float = 0.0,
+                 recals: int = 0) -> None:
         """Frames and dollars for [t0, t1).
 
         While a stream's planned instance is still booting, its *previous*
@@ -205,17 +229,39 @@ class FleetSimulator:
                 a = max(a, old_rate * dt_s
                         * self.cluster.instances[old].running_fraction(t0, t1))
             a = min(a, d)
-            if self.calibration is not None:
+            if self.service is not None:
+                # ground truth caps what gets served, independent of what any
+                # calibration *believes* — a stale belief overpays for
+                # capacity the service cannot use, it never over-serves
+                a = min(a, self.service.frame_rate_cap(s.stream_id, t0) * dt_s)
+            elif self.calibration is not None:
                 a = min(a, self.calibration.frame_rate_cap(s.stream_id) * dt_s)
             analyzed += a
         cost, hours, by_market = self.cluster.accrue(t0, t1, self.market)
+        live = len(self.cluster.live())
         self.ledger.add_tick(TickRecord(
             t=t0, cost=cost, frames_demanded=demanded,
             frames_analyzed=analyzed, frames_dropped=demanded - analyzed,
             migrations=migrations, preemptions=preemptions,
-            instances_live=len(self.cluster.live()), streams=len(streams),
+            instances_live=live, streams=len(streams),
             defrags=defrags,
             cost_ondemand=by_market.get(ONDEMAND, 0.0),
             cost_spot=by_market.get(SPOT, 0.0),
             outbids=outbids,
+            calib_rel_error=calib_err,
+            recalibrations=recals,
         ), hours)
+        if self.telemetry is not None:
+            emit = self.telemetry.emit
+            emit(t0, "fleet.cost.usd", cost)
+            emit(t0, "fleet.frames.demanded", demanded)
+            emit(t0, "fleet.frames.analyzed", analyzed)
+            emit(t0, "fleet.frames.dropped", demanded - analyzed)
+            emit(t0, "fleet.slo",
+                 (analyzed / demanded) if demanded > 0 else 1.0)
+            emit(t0, "fleet.instances.live", float(live))
+            emit(t0, "fleet.migrations", float(migrations))
+            emit(t0, "fleet.preemptions", float(preemptions))
+            emit(t0, "fleet.calib.rel_error", calib_err)
+            if recals:
+                emit(t0, "fleet.recalibrations", float(recals))

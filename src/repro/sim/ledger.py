@@ -78,6 +78,10 @@ class TickRecord:
     cost_ondemand: float = 0.0    # $ of `cost` billed at on-demand prices
     cost_spot: float = 0.0        # $ of `cost` billed at spot prices
     outbids: int = 0              # of `preemptions`: bids the price rose over
+    calib_rel_error: float = 0.0  # mean |measured-calibrated|/calibrated rate
+                                  # observed at this tick's decision (0 when
+                                  # no drift detector is attached)
+    recalibrations: int = 0       # drift-triggered re-profile + replans
 
 
 class Ledger:
@@ -142,8 +146,24 @@ class Ledger:
     def outbids(self) -> int:
         return sum(r.outbids for r in self.records)
 
+    @property
+    def recalibrations(self) -> int:
+        return sum(r.recalibrations for r in self.records)
+
+    @property
+    def calib_max_rel_error(self) -> float:
+        return max((r.calib_rel_error for r in self.records), default=0.0)
+
     def slo_attainment(self) -> float:
-        """Fraction of demanded frames actually analyzed on time."""
+        """Fraction of demanded frames actually analyzed on time.
+
+        Zero-demand convention: with no frames demanded the attainment is
+        vacuously ``1.0`` — nothing was asked for, so nothing was missed.
+        This deliberately differs from the serving engine's ``report()``,
+        whose ``slo_attainment`` is ``None`` on an empty *completion*
+        sample: an idle engine has no evidence of health, but a ledger tick
+        with zero demand has positive evidence that nothing was dropped.
+        """
         d = self.frames_demanded
         return (self.frames_analyzed / d) if d > 0 else 1.0
 
@@ -170,6 +190,8 @@ class Ledger:
             "preemptions": self.preemptions,
             "outbids": self.outbids,
             "defrags": self.defrags,
+            "recalibrations": self.recalibrations,
+            "calib_max_rel_error": round(self.calib_max_rel_error, 6),
             "instance_hours": {"/".join(k): round(v, 6)
                                for k, v in sorted(self.instance_hours.items())},
         }

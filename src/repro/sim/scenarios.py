@@ -19,6 +19,10 @@ overrides (stream count, duration, seed) for scaling studies.
                           capacity on spot: every forced-replan source at
                           once (arrivals, departures, preemptions) — the
                           stress test for min-migration repair planning.
+* ``drifting_scene``    — rush hour whose *serving capacity* regresses
+                          mid-day (``service`` carries the ground truth, an
+                          ``obs.DriftingService``): the drift-detection /
+                          online-recalibration scenario.
 """
 from __future__ import annotations
 
@@ -52,6 +56,9 @@ class Scenario:
     config: SimConfig
     catalog_factory: Callable[[], Catalog] = fig6_catalog
     description: str = ""
+    # ground-truth serving capacity (obs.DriftingService) for scenarios
+    # whose service rates change over the day; None = unconstrained
+    service: Optional[object] = None
 
     def catalog(self) -> Catalog:
         return self.catalog_factory()
@@ -157,6 +164,44 @@ def churn_storm(n_streams: int = 72, duration_h: float = 24.0,
                     "source at once (min-migration stress test)")
 
 
+def drifting_scene(n_streams: int = 72, duration_h: float = 24.0,
+                   seed: int = 0, shift_at_h: float = 12.0,
+                   shift_factor: float = 0.35) -> Scenario:
+    """Rush-hour demand whose *serving* capacity regresses mid-day.
+
+    The ground truth is an :class:`~repro.obs.DriftingService`: every stream
+    starts comfortably above its demanded rate (ZF sustains 8 frames/s, VGG
+    2.8 against demand peaks of 6 and 1.5), then at ``shift_at_h`` a
+    fleet-wide regression multiplies the true rates by ``shift_factor`` —
+    after it, a ZF stream can only sustain 2.8 frames/s against a 6 frames/s
+    peak. A policy packing from the startup profile keeps paying for
+    capacity the service can no longer use; online recalibration
+    (``obs.RecalibratingPolicy``) detects the drift, re-profiles, and
+    re-packs to the measured rates. ``benchmarks/drift_recalibration.py``
+    gates detection latency and the resulting cost savings.
+    """
+    # lazy import: obs depends on sim.ledger, so importing it at module
+    # scope would cycle through sim/__init__ -> scenarios -> obs -> sim
+    from repro.obs import DriftingService, RateShift
+    specs = _fleet(US_CAMERAS, n_streams)
+    tokens_per_frame = 8.0
+    base_rates = {c.stream_id: (22.4 if c.program == "VGG16" else 64.0)
+                  for c in specs}
+    service = DriftingService(base_rates,
+                              tokens_per_frame=tokens_per_frame,
+                              shifts=(RateShift(at_h=shift_at_h,
+                                                factor=shift_factor),))
+    return Scenario(
+        name="drifting_scene",
+        demand=DiurnalFleet(specs),
+        config=SimConfig(duration_h=duration_h, seed=seed,
+                         spot_fraction=0.0),
+        description="rush-hour fleet whose true serving rates regress 65% "
+                    "at mid-day: the drift-detection / online-recalibration "
+                    "scenario",
+        service=service)
+
+
 def _replicated(specs: Sequence[CameraSpec], replicas: int = 2
                 ) -> tuple[CameraSpec, ...]:
     """Each camera spec split into ``replicas`` load-sharing replicas
@@ -221,6 +266,7 @@ SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "spot_heavy": spot_heavy,
     "flash_crowd": flash_crowd,
     "churn_storm": churn_storm,
+    "drifting_scene": drifting_scene,
     "mega_city": mega_city,
     "spot_bidder": spot_bidder,
 }

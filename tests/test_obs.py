@@ -1,0 +1,229 @@
+"""Observability layer: telemetry hub, trace spans, drift detection, the
+drifting-service ground truth, and the recalibrating policy closing the
+profile→pack→observe loop end to end on a small drifting scene."""
+import math
+
+import pytest
+
+from repro.core.manager import ResourceManager
+from repro.core.workload import PROGRAMS, Stream
+from repro.obs import (DriftConfig, DriftDetector, DriftingService,
+                       MetricPoint, RateShift, RecalibratingPolicy,
+                       TelemetryHub, Tracer)
+from repro.sim import (FleetSimulator, RepairPolicy, SCENARIOS,
+                       ServiceCalibration, SimConfig)
+from repro.core import fig6_catalog
+from repro.sim.cluster import Cluster
+from repro.core.strategies import Plan
+
+
+# -- telemetry hub -----------------------------------------------------------
+
+def test_hub_emit_subscribe_and_series():
+    hub = TelemetryHub()
+    seen = []
+    hub.subscribe(seen.append)
+    hub.emit(0.0, "fleet.cost.usd", 1.5)
+    hub.emit(1.0, "fleet.cost.usd", 2.5, market="spot")
+    hub.emit(1.0, "fleet.slo", 0.99)
+    # push side: subscribers got every point synchronously, in order
+    assert [p.name for p in seen] == ["fleet.cost.usd", "fleet.cost.usd",
+                                      "fleet.slo"]
+    assert seen[1].attr("market") == "spot"
+    assert seen[1].attr("missing") is None
+    # pull side: latest/series/names over the same stream
+    assert hub.latest("fleet.cost.usd") == 2.5
+    assert hub.latest("never") is None
+    assert hub.series("fleet.cost.usd") == [(0.0, 1.5), (1.0, 2.5)]
+    assert hub.names() == ["fleet.cost.usd", "fleet.slo"]
+    rows = hub.to_rows()
+    assert rows[1] == {"t": 1.0, "name": "fleet.cost.usd", "value": 2.5,
+                       "attrs": {"market": "spot"}}
+
+
+def test_metric_points_are_frozen_and_hashable():
+    import dataclasses
+    p = MetricPoint(0.0, "x", 1.0, (("k", "v"),))
+    assert p in {p}
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.value = 2.0  # type: ignore[misc]
+
+
+# -- tracer ------------------------------------------------------------------
+
+def test_tracer_nests_spans_by_call_stack():
+    tr = Tracer()
+    with tr.span("recalibrate", t=14.0, rel_error=0.65) as outer:
+        with tr.span("replan.decide", t=14.0) as inner:
+            inner.attrs["action"] = "forced-replan"
+    assert len(tr.spans) == 1
+    root = tr.spans[0]
+    assert root.name == "recalibrate"
+    assert root.attrs["rel_error"] == 0.65
+    assert [c.name for c in root.children] == ["replan.decide"]
+    assert root.children[0].attrs["action"] == "forced-replan"
+    assert root.wall_ms >= root.children[0].wall_ms >= 0.0
+    # find() is depth-first across roots and children
+    assert len(tr.find("replan.decide")) == 1
+    rows = tr.to_rows()
+    assert [(r["name"], r["depth"]) for r in rows] == [
+        ("recalibrate", 0), ("replan.decide", 1)]
+
+
+# -- drift detector ----------------------------------------------------------
+
+def _calib(rates, default=None):
+    return ServiceCalibration(rates_tokens_per_s=rates, default_rate=default)
+
+
+def test_detector_fires_after_hold_ticks_and_resets():
+    det = DriftDetector(DriftConfig(rel_threshold=0.25, hold_ticks=3))
+    cal = _calib({"a": 100.0})
+    for k, t in enumerate((0.0, 1.0)):
+        v = det.observe(t, {"a": 40.0}, cal)     # 60% error
+        assert v.drifting and not v.fired and v.streak == k + 1
+    v = det.observe(2.0, {"a": 40.0}, cal)
+    assert v.fired and v.streak == 3
+    assert v.rel_error == pytest.approx(0.6)
+    det.reset()
+    assert det.streak == 0
+    # healthy measurements keep the streak at zero
+    v = det.observe(3.0, {"a": 100.0}, cal)
+    assert not v.drifting and v.streak == 0
+    assert len(det.history) == 4
+
+
+def test_detector_streak_resets_on_healthy_window():
+    det = DriftDetector(DriftConfig(rel_threshold=0.25, hold_ticks=3))
+    cal = _calib({"a": 100.0})
+    det.observe(0.0, {"a": 40.0}, cal)
+    det.observe(1.0, {"a": 40.0}, cal)
+    v = det.observe(2.0, {"a": 100.0}, cal)      # one good window
+    assert v.streak == 0
+    v = det.observe(3.0, {"a": 40.0}, cal)       # must re-earn the hold
+    assert v.streak == 1 and not v.fired
+
+
+def test_detector_empty_measurement_is_no_evidence():
+    """An idle engine (measured_rates() == {}) must neither reset nor grow
+    the streak — and must never fire."""
+    det = DriftDetector(DriftConfig(rel_threshold=0.25, hold_ticks=2))
+    cal = _calib({"a": 100.0})
+    det.observe(0.0, {"a": 40.0}, cal)
+    v = det.observe(1.0, {}, cal)
+    assert v.n_streams == 0 and not v.fired
+    assert v.streak == 1                         # preserved, not grown
+    v = det.observe(2.0, {"a": 40.0}, cal)
+    assert v.streak == 2 and v.fired
+
+
+def test_detector_skips_unprofiled_and_tiny_rates():
+    det = DriftDetector(DriftConfig(rel_threshold=0.25, hold_ticks=1))
+    cal = _calib({"a": 100.0, "z": 0.0})         # z: zero calibrated rate
+    v = det.observe(0.0, {"a": 100.0, "b": 5.0, "z": 7.0}, cal)
+    # b has no calibration and no default; z is below min_rate: both skipped
+    assert v.n_streams == 1 and not v.drifting
+    # with a default, an unprofiled stream does participate
+    v = det.observe(1.0, {"b": 5.0}, _calib({}, default=50.0))
+    assert v.n_streams == 1 and v.drifting
+
+
+# -- drifting service (ground truth + probe) ---------------------------------
+
+def test_drifting_service_shifts_compose_and_scope():
+    svc = DriftingService(
+        {"a": 80.0, "b": 80.0}, tokens_per_frame=8.0,
+        shifts=(RateShift(at_h=6.0, factor=0.5),
+                RateShift(at_h=12.0, factor=0.5, streams=frozenset({"a"}))))
+    assert svc.measure(0.0) == {"a": 80.0, "b": 80.0}
+    assert svc.measure(6.0) == {"a": 40.0, "b": 40.0}    # at_h inclusive
+    assert svc.measure(13.0) == {"a": 20.0, "b": 40.0}   # scoped shift
+    assert svc.frame_rate_cap("a", 13.0) == pytest.approx(2.5)
+    assert svc.frame_rate_cap("unknown", 13.0) == math.inf
+    cal0 = svc.initial_calibration()
+    assert cal0.rates_tokens_per_s == {"a": 80.0, "b": 80.0}
+    assert cal0.default_rate == pytest.approx(80.0)
+    assert svc.calibration_at(13.0).rates_tokens_per_s["a"] == 20.0
+
+
+# -- cluster telemetry hooks -------------------------------------------------
+
+def test_cluster_lifecycle_reaches_telemetry():
+    hub = TelemetryHub()
+    cl = Cluster(boot_delay_h=0.05, telemetry=hub)
+    inst = cl._boot(1.0, "m4@us-east", "m4.xlarge", "us-east", 0.2)
+    cl.terminate(inst.instance_id, 2.0)
+    cl.terminate(inst.instance_id, 3.0)          # later never re-emits
+    boots = [p for p in hub.points if p.name == "cluster.instance.boot"]
+    terms = [p for p in hub.points if p.name == "cluster.instance.terminate"]
+    assert len(boots) == 1 and len(terms) == 1
+    assert boots[0].attr("location") == "us-east"
+    assert terms[0].t == 2.0
+    assert terms[0].attr("preempted") == "False"
+
+
+# -- recalibrating policy end to end -----------------------------------------
+
+def _drift_run(online: bool):
+    sc = SCENARIOS["drifting_scene"](n_streams=24, duration_h=24.0, seed=0)
+    cat = sc.catalog()
+    inner = RepairPolicy(ResourceManager(cat), migration_budget=8,
+                         defrag_ratio=1.25)
+    cfg = DriftConfig() if online else DriftConfig(rel_threshold=math.inf)
+    policy = RecalibratingPolicy(inner, sc.service,
+                                 detector=DriftDetector(cfg))
+    ledger = FleetSimulator(sc.demand, policy, cat, sc.config,
+                            service=sc.service,
+                            telemetry=policy.telemetry).run()
+    return policy, ledger
+
+
+def test_recalibration_closes_the_loop_on_drifting_scene():
+    policy, ledger = _drift_run(online=True)
+    # the regression lands at t=12; hold_ticks=3 -> fires by t=15
+    assert len(policy.recalibrations) >= 1
+    fired = policy.recalibrations[0]
+    assert 12.0 <= fired <= 12.0 + policy.detector.config.hold_ticks
+    # the ledger recorded the recalibration and the error it saw
+    assert ledger.recalibrations == len(policy.recalibrations)
+    assert ledger.calib_max_rel_error > 0.25
+    rec = next(r for r in ledger.records if r.recalibrations)
+    assert rec.t >= fired
+    # the event trace flags exactly the drift-forced replans
+    flagged = [e for e in policy.adaptive.events if e.recalibration]
+    assert len(flagged) == len(policy.recalibrations)
+    assert all(e.action == "forced-replan" for e in flagged)
+    # telemetry streamed the loop live; the trace nested the forced replan
+    assert policy.telemetry.latest("drift.recalibrations") == 1.0
+    assert policy.telemetry.series("fleet.cost.usd")
+    recal_spans = policy.tracer.find("recalibrate")
+    assert len(recal_spans) == 1
+    assert recal_spans[0].children[0].name == "replan.decide"
+    # after adopting the measured rates the detector sees ~zero error
+    assert policy.last_drift is not None
+    assert policy.last_drift.rel_error < 0.01
+
+
+def test_online_recalibration_beats_stale_profile():
+    """The benchmark gate in miniature: same truth caps both arms, so the
+    recalibrated arm must be cheaper without serving fewer frames (beyond
+    replan boot transients)."""
+    _, stale = _drift_run(online=False)
+    _, online = _drift_run(online=True)
+    assert stale.recalibrations == 0
+    assert online.total_cost < stale.total_cost
+    assert online.slo_attainment() >= stale.slo_attainment() - 0.005
+    assert online.frames_demanded == pytest.approx(stale.frames_demanded)
+
+
+def test_recalibrating_policy_clamps_planned_rates():
+    svc = DriftingService({"cam": 16.0}, tokens_per_frame=8.0)  # 2 fps cap
+    cat = fig6_catalog()
+    policy = RecalibratingPolicy(RepairPolicy(ResourceManager(cat)), svc)
+    clamped = policy._clamped(
+        [Stream("cam", PROGRAMS["ZF"], fps=6.0, camera="nyc"),
+         Stream("slow", PROGRAMS["ZF"], fps=1.0, camera="nyc")])
+    assert clamped[0].fps == pytest.approx(2.0)
+    assert clamped[1].fps == pytest.approx(1.0)   # under the cap: untouched
+    plan = policy.decide(0, clamped)
+    assert isinstance(plan, Plan)

@@ -159,7 +159,9 @@ def test_report_with_no_completions_never_raises():
     assert rep["tokens_per_s"] == 0.0
     assert rep["p50_latency_s"] is None
     assert rep["p99_latency_s"] is None
-    assert rep["slo_attainment"] == 1.0
+    # no completions = no evidence: None, not a perfect 1.0 (a drift
+    # detector reading 1.0 off an idle engine would mask real regressions)
+    assert rep["slo_attainment"] is None
     assert rep["slot_occupancy"] == 0.0
     assert eng.measured_rates() == {}
 
@@ -177,11 +179,63 @@ def test_measured_rates_per_stream_export():
     rates = eng.measured_rates()
     assert set(rates) == {"cam-0", "cam-1"}
     assert all(r > 0 for r in rates.values())
-    # per-stream tallies account for every generated token
-    total = sum(rates.values()) * eng.stats["wall_s"]
+    # per-stream tallies account for every generated token; rates are per
+    # active window, and streams submitted together share the full run, so
+    # each stream's tokens reconstruct from its own window span
+    total = sum(rates[sid] * (w[1] - w[0])
+                for sid, w in eng._stream_window.items())
     assert total == pytest.approx(eng.stats["tokens_generated"])
     eng.reset_stats()
     assert eng.measured_rates() == {}
+
+
+def test_measured_rates_late_joiner_not_underestimated():
+    """Regression: rates used to divide by *total* wall time, so a stream
+    that joined late looked slower than it served — phantom drift. Rates
+    are now over each stream's own active window."""
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2,
+                                   cache_len=CACHE_LEN)
+    rng = np.random.default_rng(11)
+    toks = lambda: rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+    # early stream runs alone for a while
+    eng.submit(Request("r0", toks(), max_new_tokens=12, stream_id="early"))
+    eng.drain()
+    wall_before_join = eng.stats["wall_s"]
+    assert wall_before_join > 0
+    # late joiner arrives after the early traffic is done
+    eng.submit(Request("r1", toks(), max_new_tokens=12, stream_id="late"))
+    eng.drain()
+    rates = eng.measured_rates()
+    # same work, same decode cost: the late joiner's rate must reflect its
+    # own window, not be diluted by the time before it existed
+    first, last = eng._stream_window["late"]
+    assert first >= wall_before_join
+    late_tokens = eng._stream_tokens["late"]
+    stale_rate = late_tokens / eng.stats["wall_s"]   # the old, buggy math
+    assert rates["late"] == pytest.approx(late_tokens / (last - first))
+    assert rates["late"] > stale_rate
+
+
+def test_windowed_rates_delta_export():
+    """windowed_rates() reports tokens/s since the previous poll — the
+    streaming export a drift detector samples — and drains to empty."""
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2,
+                                   cache_len=CACHE_LEN)
+    rng = np.random.default_rng(12)
+    toks = lambda: rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+    eng.submit(Request("r0", toks(), max_new_tokens=6, stream_id="cam-0"))
+    eng.drain()
+    first = eng.windowed_rates()
+    assert set(first) == {"cam-0"}
+    assert first["cam-0"] > 0
+    # no new tokens since the poll: empty, not a repeat of old traffic
+    assert eng.windowed_rates() == {}
+    eng.submit(Request("r1", toks(), max_new_tokens=6, stream_id="cam-1"))
+    eng.drain()
+    second = eng.windowed_rates()
+    assert set(second) == {"cam-1"}
 
 
 class _CollectingEngine:

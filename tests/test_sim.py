@@ -318,3 +318,51 @@ def test_measured_rates_feed_packing_items():
     calib = ServiceCalibration.from_engine(eng)
     packed = calib.packing_streams("olmo-1b")
     assert {s.stream_id for s in packed} == {"cam-0", "cam-1"}
+
+def test_service_calibration_edge_conventions():
+    """Uncalibrated stream with no default -> inf (never caps); an explicit
+    default covers unmeasured streams; from_engine with no traffic stays
+    fully uncalibrated."""
+    import math
+
+    bare = ServiceCalibration()
+    assert bare.default_rate is None
+    assert bare.frame_rate_cap("anything") == math.inf
+
+    with_default = ServiceCalibration(rates_tokens_per_s={"cam": 16.0},
+                                      default_rate=8.0)
+    assert with_default.frame_rate_cap("cam") == pytest.approx(2.0)
+    assert with_default.frame_rate_cap("unmeasured") == pytest.approx(1.0)
+
+    idle = ServiceCalibration.from_engine(_StubEngine({}))
+    assert idle.rates_tokens_per_s == {}
+    assert idle.default_rate is None
+    assert idle.frame_rate_cap("cam") == math.inf
+
+
+def test_ewma_policy_evicts_departed_stream_state():
+    """Regression: forecast state leaked for departed streams, so a camera
+    that rejoined inherited a stale trend (and state grew without bound
+    under churn). Departures must drop state; a rejoin starts fresh."""
+    cat = fig6_catalog()
+    pol = PredictiveEWMAPolicy(ResourceManager(cat))
+
+    def s(fps):
+        return Stream("cam", PROGRAMS["ZF"], fps=fps, camera="nyc")
+
+    other = Stream("other", PROGRAMS["ZF"], fps=1.0, camera="nyc")
+    # build a strong upward trend on "cam"
+    for fps in (1.0, 3.0, 5.0):
+        pol.forecast([s(fps), other])
+    assert pol._trend["cam"] > 0
+    # "cam" departs: its state must be evicted, the survivor's kept
+    pol.forecast([other])
+    assert "cam" not in pol._prev_fps
+    assert "cam" not in pol._trend
+    assert "other" in pol._prev_fps
+    # rejoin at a low rate: a fresh trend, not the stale climb -> the
+    # forecast is the demanded rate, not an extrapolated ramp
+    out = pol.forecast([s(1.0), other])
+    rejoined = next(x for x in out if x.stream_id == "cam")
+    assert rejoined.fps == pytest.approx(1.0)
+    assert pol._trend["cam"] == pytest.approx(0.0)
