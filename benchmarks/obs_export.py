@@ -1,0 +1,340 @@
+"""Benchmark (BEYOND-PAPER): observability v2 — exporters and per-group drift.
+
+Three gates over the new ``repro.obs`` surface:
+
+1. **Per-group vs fleet-wide recalibration** (``regional_drift``): a
+   three-region fleet whose serving rates regress in *one* region. Both
+   arms run the identical seeded scenario, the same live
+   ``windowed_rates()``-semantics probe, and the same repair-mode inner
+   policy; the only difference is the loop's granularity:
+
+   * **fleet-wide** — PR-6-style ``RecalibratingPolicy``: one detector
+     over the fleet mean (the regression diluted to ~0.27, just above the
+     0.25 threshold), re-profiles everything, unscoped repair;
+   * **per-group** — ``RegionalRecalibratingPolicy``: one detector per
+     region, re-profiles only the fired region's streams, repair scoped to
+     the bins hosting them.
+
+   Accepted when only the drifted region's detector fires, and the
+   per-group arm matches or beats fleet-wide cost with *strictly fewer*
+   migrations — fleet-wide consolidation spends its budget closing
+   healthy-region tail bins (and colonizing the drifted region's freed
+   capacity), which is exactly the disruption scoping exists to prevent.
+
+2. **Lossless exports**: the JSONL metric file read back equals the hub's
+   point stream exactly, and the Chrome-trace document reconstructs the
+   tracer's span trees exactly (names, simulated times, wall-clock
+   durations, attrs, nesting).
+
+3. **Telemetry overhead**: a ``mega_city`` slice (10k streams) with the
+   hub + JSONL exporter + aggregator attached must cost < 5% wall-clock
+   over the same run with telemetry off (min-of-2 each way).
+
+``--out`` writes the summary JSON (uploaded as a CI artifact); ``--smoke``
+exits non-zero on any violated bar.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+# runnable as `python benchmarks/obs_export.py` from the repo root
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core.manager import ResourceManager
+from repro.obs import (RecalibratingPolicy, RegionalRecalibratingPolicy,
+                       Tracer, WindowedServiceProbe, hub_with_exporters,
+                       load_jsonl_metrics, spans_from_chrome_trace,
+                       write_chrome_trace)
+from repro.sim import FleetSimulator, ReactivePolicy, RepairPolicy, SCENARIOS
+
+N_STREAMS = 96
+DURATION_H = 24.0
+SEED = 0
+SHIFT_AT_H = 12.0              # when regional_drift's regression lands
+DRIFTED_REGION = "ap-northeast-1"
+MIGRATION_BUDGET = N_STREAMS // 8
+
+OVERHEAD_DURATION_H = 6.0      # mega_city slice for the overhead gate
+OVERHEAD_STREAMS = 10_000
+
+# acceptance bars
+MAX_OVERHEAD = 0.05            # telemetry-on wall-clock vs telemetry-off
+TIME_BUDGET_S = 90.0
+
+
+def _conserved(ledger) -> bool:
+    return all(abs(r.frames_demanded - r.frames_analyzed - r.frames_dropped)
+               < 1e-6 * max(1.0, r.frames_demanded) for r in ledger.records)
+
+
+def _spans_equal(a, b) -> bool:
+    return (a.name == b.name and a.t == b.t and a.wall_ms == b.wall_ms
+            and a.attrs == b.attrs and len(a.children) == len(b.children)
+            and all(_spans_equal(x, y)
+                    for x, y in zip(a.children, b.children)))
+
+
+def _arm(sc, cat, regional: bool, jsonl_path=None):
+    """One policy arm; identical probe semantics and inner policy both ways —
+    only the detection/recalibration granularity differs."""
+    inner = RepairPolicy(ResourceManager(cat),
+                         migration_budget=MIGRATION_BUDGET,
+                         defrag_ratio=1.25)
+    hub, exporter, agg = hub_with_exporters(
+        jsonl_path, histograms=("replan.wall_ms", "fleet.slo"))
+    if regional:
+        policy = RegionalRecalibratingPolicy(
+            inner, sc.service, group_of=sc.groups.__getitem__,
+            telemetry=hub, tracer=Tracer())
+    else:
+        policy = RecalibratingPolicy(
+            inner, sc.service, probe=WindowedServiceProbe(sc.service),
+            telemetry=hub, tracer=Tracer())
+    ledger = FleetSimulator(sc.demand, policy, cat, sc.config,
+                            service=sc.service, telemetry=hub).run()
+    if exporter is not None:
+        exporter.close()
+    return policy, ledger, hub, agg
+
+
+def compare(workdir: str) -> dict:
+    sc = SCENARIOS["regional_drift"](n_streams=N_STREAMS,
+                                     duration_h=DURATION_H, seed=SEED)
+    cat = sc.catalog()
+    jsonl_path = os.path.join(workdir, "regional_metrics.jsonl")
+    trace_path = os.path.join(workdir, "regional_trace.json")
+
+    t0 = time.perf_counter()
+    fleet_policy, fleet, _, _ = _arm(sc, cat, regional=False)
+    reg_policy, reg, hub, agg = _arm(sc, cat, regional=True,
+                                     jsonl_path=jsonl_path)
+    elapsed = time.perf_counter() - t0
+
+    # -- export round-trips (gate 2) -------------------------------------
+    loaded = load_jsonl_metrics(jsonl_path)
+    jsonl_ok = loaded == hub.points
+    write_chrome_trace(trace_path, reg_policy.tracer)
+    rebuilt = spans_from_chrome_trace(trace_path)
+    trace_ok = (len(rebuilt) == len(reg_policy.tracer.spans)
+                and all(_spans_equal(x, y)
+                        for x, y in zip(rebuilt, reg_policy.tracer.spans)))
+
+    # -- per-region firing map (gate 1) ----------------------------------
+    fired_ever = reg_policy.regional.fired_groups()
+    per_region_err = {
+        g: round(max((v.rel_error for v in det.history), default=0.0), 4)
+        for g, det in sorted(reg_policy.regional.detectors.items())}
+    fired_at = (reg_policy.recalibrations[0]
+                if reg_policy.recalibrations else None)
+    dt = sc.config.dt_h
+    wall = agg.instruments["replan.wall_ms"].summary()
+
+    ft, rt = fleet.totals(), reg.totals()
+    return {
+        "scenario": "regional_drift",
+        "n_streams": N_STREAMS,
+        "duration_h": DURATION_H,
+        "seed": SEED,
+        "shift_at_h": SHIFT_AT_H,
+        "drifted_region": DRIFTED_REGION,
+        "migration_budget": MIGRATION_BUDGET,
+        "hold_ticks": reg_policy.regional.config.hold_ticks,
+        "fleet_wide": ft,
+        "per_group": rt,
+        "fleet_recalibrations": len(fleet_policy.recalibrations),
+        "group_recalibrations": reg_policy.recal_groups,
+        "fired_groups": list(fired_ever),
+        "per_region_max_rel_error": per_region_err,
+        "fired_at_h": fired_at,
+        "detect_latency_ticks": (None if fired_at is None
+                                 else round((fired_at - SHIFT_AT_H) / dt, 3)),
+        "cost_delta": round(rt["total_cost"] - ft["total_cost"], 4),
+        "migrations_delta": rt["migrations"] - ft["migrations"],
+        "slo_delta": round(reg.slo_attainment() - fleet.slo_attainment(), 6),
+        "jsonl_points": len(loaded),
+        "jsonl_roundtrip": jsonl_ok,
+        "trace_spans": len(rebuilt),
+        "trace_roundtrip": trace_ok,
+        "replan_wall_ms": {k: wall.get(k) for k in
+                           ("count", "p50", "p95", "p99")},
+        "frames_conserved": _conserved(fleet) and _conserved(reg),
+        "elapsed_s": round(elapsed, 2),
+    }
+
+
+def overhead() -> dict:
+    """Telemetry-on vs telemetry-off wall clock on a mega_city slice."""
+    def once(telemetry: bool) -> float:
+        sc = SCENARIOS["mega_city"](n_streams=OVERHEAD_STREAMS,
+                                    duration_h=OVERHEAD_DURATION_H, seed=SEED)
+        cat = sc.catalog()
+        policy = ReactivePolicy(ResourceManager(cat))
+        if telemetry:
+            with tempfile.TemporaryDirectory() as tmp:
+                hub, exporter, agg = hub_with_exporters(
+                    os.path.join(tmp, "mega.jsonl"))
+                t0 = time.perf_counter()
+                FleetSimulator(sc.demand, policy, cat, sc.config,
+                               telemetry=hub).run()
+                wall = time.perf_counter() - t0
+                exporter.close()
+            return wall
+        t0 = time.perf_counter()
+        FleetSimulator(sc.demand, policy, cat, sc.config).run()
+        return time.perf_counter() - t0
+
+    once(False)                                  # warm caches once
+    # interleaved min-of-3: scheduler/thermal noise on ~2 s runs is larger
+    # than the actual hub cost (a few hundred emits), so pair the samples
+    # and let min() strip the noise from both arms symmetrically
+    samples = [(once(False), once(True)) for _ in range(3)]
+    t_off = min(s[0] for s in samples)
+    t_on = min(s[1] for s in samples)
+    rel = (t_on - t_off) / t_off if t_off > 0 else 0.0
+    return {"streams": OVERHEAD_STREAMS, "duration_h": OVERHEAD_DURATION_H,
+            "wall_off_s": round(t_off, 3), "wall_on_s": round(t_on, 3),
+            "overhead": round(rel, 4)}
+
+
+def check_acceptance(r: dict, o: dict, total_elapsed: float) -> list[str]:
+    """Returns a list of violated acceptance bars (empty = pass)."""
+    bad = []
+    if r["fired_groups"] != [r["drifted_region"]]:
+        bad.append(f"fired regions {r['fired_groups']} != "
+                   f"[{r['drifted_region']}] (only the drifted region "
+                   "should fire)")
+    if r["fleet_recalibrations"] < 1:
+        bad.append("fleet-wide baseline never recalibrated "
+                   "(comparison would be vacuous)")
+    if r["fired_at_h"] is None:
+        bad.append("per-group detector never fired")
+    elif r["detect_latency_ticks"] > r["hold_ticks"] + 1:
+        # windowed probe: a mid-window shift reaches full magnitude one
+        # window later than the instantaneous probe sees it
+        bad.append(f"detection latency {r['detect_latency_ticks']} ticks "
+                   f"> hold_ticks+1 = {r['hold_ticks'] + 1}")
+    if r["cost_delta"] > 0:
+        bad.append(f"per-group cost exceeds fleet-wide by {r['cost_delta']}")
+    if r["migrations_delta"] >= 0:
+        bad.append(f"per-group migrations not strictly fewer "
+                   f"(delta {r['migrations_delta']:+d})")
+    if not r["jsonl_roundtrip"]:
+        bad.append("JSONL metric export did not round-trip losslessly")
+    if not r["trace_roundtrip"]:
+        bad.append("Chrome-trace export did not round-trip losslessly")
+    if not r["replan_wall_ms"]["count"]:
+        bad.append("replan.wall_ms histogram is empty")
+    if not r["frames_conserved"]:
+        bad.append("ledger frame conservation violated")
+    if o["overhead"] > MAX_OVERHEAD:
+        bad.append(f"telemetry overhead {o['overhead']:.1%} "
+                   f"> {MAX_OVERHEAD:.0%}")
+    if total_elapsed > TIME_BUDGET_S:
+        bad.append(f"suite took {total_elapsed:.1f}s > {TIME_BUDGET_S:.0f}s")
+    return bad
+
+
+def _collect() -> tuple[dict, dict, list[str], float]:
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as workdir:
+        r = compare(workdir)
+    o = overhead()
+    total_elapsed = time.perf_counter() - t0
+    return r, o, check_acceptance(r, o, total_elapsed), total_elapsed
+
+
+def run() -> list[dict]:
+    """Harness entry (benchmarks/run.py): CSV rows with acceptance flags."""
+    r, o, violations, total_elapsed = _collect()
+    return [{
+        "name": "obs_export_regional_drift",
+        "us_per_call": r["elapsed_s"] * 1e6,
+        "derived": (f"fired {','.join(r['fired_groups'])} "
+                    f"t={r['fired_at_h']} cost "
+                    f"{r['fleet_wide']['total_cost']:.2f}->"
+                    f"{r['per_group']['total_cost']:.2f} "
+                    f"migrations {r['fleet_wide']['migrations']}->"
+                    f"{r['per_group']['migrations']}"),
+        "match_paper": not violations,
+    }, {
+        "name": "obs_export_roundtrip",
+        "us_per_call": r["elapsed_s"] * 1e6,
+        "derived": (f"jsonl {r['jsonl_points']} pts "
+                    f"{'ok' if r['jsonl_roundtrip'] else 'LOSSY'}; "
+                    f"trace {r['trace_spans']} spans "
+                    f"{'ok' if r['trace_roundtrip'] else 'LOSSY'}"),
+        "match_paper": r["jsonl_roundtrip"] and r["trace_roundtrip"],
+    }, {
+        "name": "obs_export_overhead",
+        "us_per_call": o["wall_on_s"] * 1e6,
+        "derived": (f"mega_city {o['duration_h']}h telemetry "
+                    f"{o['wall_off_s']}s->{o['wall_on_s']}s "
+                    f"({o['overhead']:+.1%})"),
+        "match_paper": o["overhead"] <= MAX_OVERHEAD,
+    }, {
+        "name": "obs_export_acceptance",
+        "us_per_call": total_elapsed * 1e6,
+        "derived": "all bars met" if not violations else "; ".join(violations),
+        "match_paper": not violations,
+    }]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the acceptance gates and exit non-zero on any "
+                         "violated bar (CI gate)")
+    ap.add_argument("--out", default=None,
+                    help="write the summary JSON here")
+    args = ap.parse_args(argv)
+
+    r, o, violations, total_elapsed = _collect()
+
+    print(f"regional_drift  regression in {r['drifted_region']} at "
+          f"t={r['shift_at_h']}h; per-group detector fired "
+          f"{r['fired_groups']} at t={r['fired_at_h']}h "
+          f"(+{r['detect_latency_ticks']} ticks, hold={r['hold_ticks']})")
+    print(f"  cost fleet-wide {r['fleet_wide']['total_cost']:.2f} vs "
+          f"per-group {r['per_group']['total_cost']:.2f} "
+          f"({r['cost_delta']:+.2f})  migrations "
+          f"{r['fleet_wide']['migrations']} vs "
+          f"{r['per_group']['migrations']} ({r['migrations_delta']:+d})  "
+          f"SLO {r['slo_delta']:+.4f}")
+    print(f"  exports: jsonl {r['jsonl_points']} points "
+          f"roundtrip={r['jsonl_roundtrip']}; chrome trace "
+          f"{r['trace_spans']} spans roundtrip={r['trace_roundtrip']}; "
+          f"replan wall_ms p99={r['replan_wall_ms']['p99']}")
+    print(f"  overhead: mega_city {o['duration_h']}h x {o['streams']} "
+          f"streams {o['wall_off_s']}s -> {o['wall_on_s']}s "
+          f"({o['overhead']:+.1%}, bar {MAX_OVERHEAD:.0%})")
+
+    summary = {"result": r, "overhead": o, "violations": violations,
+               "elapsed_s": round(total_elapsed, 2),
+               "bars": {"max_overhead": MAX_OVERHEAD,
+                        "max_detect_latency_ticks": r["hold_ticks"] + 1,
+                        "time_budget_s": TIME_BUDGET_S}}
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+        print(f"summary written to {args.out}")
+
+    if violations:
+        print("ACCEPTANCE " + ("FAILED" if args.smoke else "bars violated")
+              + ":\n  " + "\n  ".join(violations))
+        return 1 if args.smoke else 0
+    print(f"acceptance ok in {total_elapsed:.1f}s "
+          f"(budget {TIME_BUDGET_S:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

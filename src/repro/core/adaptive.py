@@ -87,18 +87,31 @@ class AdaptiveManager:
     # consumed by the next step(): marks its event as recalibration-forced
     recalibration_pending: bool = dataclasses.field(default=False,
                                                     repr=False)
+    # consumed alongside the flag: restricts that replan's repair to bins
+    # hosting these streams (per-group recalibration; None = unrestricted)
+    recalibration_scope: Optional[frozenset] = dataclasses.field(
+        default=None, repr=False)
 
     def __post_init__(self) -> None:
         if self.strategy == "REPAIR" and self.repair is None:
             self.repair = RepairConfig()
 
-    def flag_recalibration(self) -> None:
+    def flag_recalibration(self,
+                           scope: Optional[frozenset] = None) -> None:
         """Mark the *next* decision as recalibration-triggered (called by
         ``repro.obs.RecalibratingPolicy`` just before it forces a replan
         with the re-profiled calibration); the flag is consumed by the
         event that decision appends, so the trace records which replans
-        the drift detector caused."""
+        the drift detector caused.
+
+        ``scope`` (per-group recalibration, ``obs.regional``): restrict
+        that replan's repair to bins hosting the given stream ids — healthy
+        regions' placements are not consolidation fodder and the defrag
+        escape hatch stays shut. Repair mode only; full re-solves and mixed
+        plans have no bin identity to scope by, so it is ignored there."""
         self.recalibration_pending = True
+        self.recalibration_scope = (frozenset(scope)
+                                    if scope is not None else None)
 
     def _multipliers(self) -> dict:
         return self.multipliers_fn() if self.multipliers_fn is not None else {}
@@ -141,7 +154,9 @@ class AdaptiveManager:
                 used = [u + r for u, r in zip(used, req)]
         return True
 
-    def _candidate(self, streams: Sequence[Stream]) -> tuple[Plan, int, bool]:
+    def _candidate(self, streams: Sequence[Stream],
+                   scope: Optional[frozenset] = None
+                   ) -> tuple[Plan, int, bool]:
         """(candidate plan, migrations it would perform, defrag?)."""
         if self.mixed is not None:
             res = self.manager.plan_mixed(streams, self._multipliers(),
@@ -151,7 +166,7 @@ class AdaptiveManager:
         if self.repair_mode:
             res: RepairResult = repair_plan(
                 streams, self.manager.catalog, previous=self.current,
-                config=self.repair or RepairConfig())
+                config=self.repair or RepairConfig(), scope=scope)
             return res.plan, res.migrations, res.defrag
         candidate = self.manager.plan(streams, self.strategy, self.target_fps)
         migrations = (0 if self.current is None
@@ -166,7 +181,9 @@ class AdaptiveManager:
         capacity (e.g. an instance it relies on was spot-preempted).
         """
         recal = self.recalibration_pending
+        scope = self.recalibration_scope if recal else None
         self.recalibration_pending = False
+        self.recalibration_scope = None
         if self.current is None:
             # first placement goes through the configured strategy — repair
             # mode only changes how *replans* are computed (with no previous
@@ -192,7 +209,7 @@ class AdaptiveManager:
                                              self.current.hourly_cost, 0,
                                              recalibration=recal))
             return self.current
-        candidate, migrations, defrag = self._candidate(streams)
+        candidate, migrations, defrag = self._candidate(streams, scope)
         if not feasible:
             self.current = candidate
             self.events.append(AdaptiveEvent(t, "forced-replan",

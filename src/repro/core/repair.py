@@ -233,16 +233,23 @@ def _final_moves(bins: Sequence[Bin], origins: Sequence[Optional[int]],
 def _consolidate(problem: Problem, bins: list[Bin],
                  bin_used: list[list[float]],
                  origins: list[Optional[int]], budget: int,
-                 free_movers: set[int]) -> int:
+                 free_movers: set[int],
+                 scope: Optional[frozenset] = None) -> int:
     """Close the emptiest bins by re-packing their members into residual
     capacity elsewhere, spending at most ``budget`` moves. A member in
     ``free_movers`` (an arrival or an already-evicted stream — it is moving
-    this tick anyway) costs no budget. Returns the budget spent."""
+    this tick anyway) costs no budget. ``scope`` (per-group recalibration)
+    restricts which bins may *close*: only bins hosting a scoped stream, or
+    bins opened this repair (origin ``None``) — a healthy region's
+    placements are never consolidation fodder, though any bin may still
+    *receive* movers. Returns the budget spent."""
     moved = 0
     while budget - moved >= 0:
         # emptiest first: fewest members, then highest price per member
         candidates = sorted(
-            range(len(bins)),
+            (n for n in range(len(bins))
+             if scope is None or origins[n] is None
+             or any(problem.items[i].key in scope for i in bins[n].items)),
             key=lambda n: (len(bins[n].items),
                            -problem.choices[bins[n].choice].price))
         closed = False
@@ -284,11 +291,20 @@ def _consolidate(problem: Problem, bins: list[Bin],
 
 def repair_plan(streams: Sequence[Stream], catalog: Catalog,
                 previous: Optional[Plan] = None,
-                config: RepairConfig = RepairConfig()) -> RepairResult:
+                config: RepairConfig = RepairConfig(),
+                scope: Optional[frozenset] = None) -> RepairResult:
     """Incrementally repair ``previous`` for the new stream set.
 
     With no previous plan this degrades to a fresh FFD plan (everything is
     an arrival; migrations are zero by definition).
+
+    ``scope`` (per-group recalibration, ``obs.regional``): a set of stream
+    ids whose calibration just changed. The keep/evict pass and delta
+    packing run as usual — feasibility is global — but voluntary work is
+    confined to the scope: consolidation may only close bins hosting a
+    scoped stream (or bins opened this call), and the defrag escape hatch
+    stays shut — a fleet-wide reshuffle is never the right response to a
+    one-region re-profile.
     """
     rtt = any(s.camera is not None for s in streams)
     problem = build_problem(streams, catalog, rtt_filter=rtt)
@@ -319,7 +335,7 @@ def repair_plan(streams: Sequence[Stream], catalog: Catalog,
         if left >= 0:
             free = set(evicted) | set(arrivals)   # moving this tick anyway
             consolidated = _consolidate(problem, kept, kept_used, origins,
-                                        left, free)
+                                        left, free, scope)
 
     cost = sum(problem.choices[b.choice].price for b in kept)
     sol = Solution(bins=kept, cost=cost, optimal=False, note="repair")
@@ -327,7 +343,7 @@ def repair_plan(streams: Sequence[Stream], catalog: Catalog,
     plan = Plan(sol, problem, "REPAIR")
 
     fresh_cost: Optional[float] = None
-    if config.defrag_ratio is not None:
+    if config.defrag_ratio is not None and scope is None:
         fresh = first_fit_decreasing(problem)
         fresh_cost = fresh.cost
         if cost >= config.defrag_ratio * fresh.cost - 1e-9:

@@ -23,19 +23,44 @@ from that calibration forever. This package makes the loop continuous:
                      policy: re-profiles on drift and forces a
                      min-migration repair replan through the existing
                      ``core/repair.py`` machinery.
+* ``export``       — the exporter bridge: :class:`JsonlMetricExporter`
+                     (OTLP-ish newline-delimited JSON, a hub subscriber),
+                     :func:`chrome_trace` / :func:`write_chrome_trace`
+                     (span trees as ``chrome://tracing`` JSON), and the
+                     :class:`MetricAggregator` with Counter / Gauge /
+                     Histogram instruments (exact p50/p95/p99).
+* ``regional``     — per-region live drift: :class:`WindowedServiceProbe`
+                     (``windowed_rates()`` delta-export semantics over the
+                     simulated truth), :class:`EngineWindowProbe` (real
+                     per-region engines), :class:`RegionalDriftDetector`
+                     (one streak per group) and
+                     :class:`RegionalRecalibratingPolicy` (re-profile only
+                     the drifted group, repair scoped to its bins).
 
-``benchmarks/drift_recalibration.py`` gates the outcome: on the
-``drifting_scene`` scenario, online recalibration beats a stale-calibration
-baseline on cost at equal-or-better SLO.
+``benchmarks/drift_recalibration.py`` gates the fleet-wide loop on
+``drifting_scene``; ``benchmarks/obs_export.py`` gates the exporters and
+the per-group loop on ``regional_drift``.
 """
 from repro.obs.drift import DriftConfig, DriftDetector, DriftVerdict
+from repro.obs.export import (Counter, Gauge, Histogram, JsonlMetricExporter,
+                              MetricAggregator, chrome_trace,
+                              hub_with_exporters, load_jsonl_metrics,
+                              spans_from_chrome_trace, write_chrome_trace)
 from repro.obs.metrics import MetricPoint, TelemetryHub
 from repro.obs.probe import DriftingService, RateShift
 from repro.obs.recalibrate import RecalibratingPolicy
+from repro.obs.regional import (EngineWindowProbe, RegionalDriftDetector,
+                                RegionalRecalibratingPolicy, RegionalVerdict,
+                                WindowedServiceProbe, camera_region_groups)
 from repro.obs.trace import Span, Tracer
 
 __all__ = [
-    "DriftConfig", "DriftDetector", "DriftVerdict", "DriftingService",
-    "MetricPoint", "RateShift", "RecalibratingPolicy", "Span",
-    "TelemetryHub", "Tracer",
+    "Counter", "DriftConfig", "DriftDetector", "DriftVerdict",
+    "DriftingService", "EngineWindowProbe", "Gauge", "Histogram",
+    "JsonlMetricExporter", "MetricAggregator", "MetricPoint", "RateShift",
+    "RecalibratingPolicy", "RegionalDriftDetector",
+    "RegionalRecalibratingPolicy", "RegionalVerdict", "Span", "TelemetryHub",
+    "Tracer", "WindowedServiceProbe", "camera_region_groups", "chrome_trace",
+    "hub_with_exporters", "load_jsonl_metrics", "spans_from_chrome_trace",
+    "write_chrome_trace",
 ]

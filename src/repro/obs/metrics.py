@@ -9,8 +9,8 @@ drift detector, a JSON exporter) receive every point synchronously at emit
 time — incremental export, no buffering required to observe the run live.
 
 Metric names follow OTel-ish dotted conventions; the full catalog exported
-by the simulator is documented in docs/simulator.md ("Telemetry and
-recalibration"). Everything is plain data: points are frozen, the hub keeps
+by the simulator is documented in docs/observability.md ("The hub and the
+metric catalog"). Everything is plain data: points are frozen, the hub keeps
 an append-only list, and ``series(name)`` gives the per-metric time series
 for tests and plots.
 """
@@ -58,6 +58,10 @@ class TelemetryHub:
         self.points: list[MetricPoint] = []
         self._latest: dict[str, MetricPoint] = {}
         self._subscribers: list[Subscriber] = []
+        # (t, subscriber repr, error repr) per delivery failure — a raising
+        # subscriber (an exporter hitting a closed file, a flaky dashboard
+        # callback) must never abort the producer's event loop
+        self.subscriber_failures: list[tuple[float, str, str]] = []
 
     def subscribe(self, fn: Subscriber) -> None:
         """Register a callback invoked synchronously on every emit."""
@@ -70,7 +74,15 @@ class TelemetryHub:
         self.points.append(point)
         self._latest[name] = point
         for fn in self._subscribers:
-            fn(point)
+            # subscriber isolation: one raising consumer must not abort the
+            # fleet event loop nor starve the remaining subscribers — record
+            # the failure and keep delivering
+            try:
+                fn(point)
+            except Exception as e:            # noqa: BLE001 - isolation point
+                self.subscriber_failures.append(
+                    (t, getattr(fn, "__qualname__", None) or repr(fn),
+                     f"{type(e).__name__}: {e}"))
         return point
 
     # -- pull-side views ------------------------------------------------------

@@ -70,8 +70,34 @@ class DriftingService:
         return {sid: self._rate(sid, t_h) for sid in sorted(self.base_rates)}
 
     def measure(self, t_h: float) -> dict[str, float]:
-        """The probe: what a windowed engine export reports at ``t_h``."""
+        """The exact probe: the instantaneous true rates at ``t_h``."""
         return self.rates_at(t_h)
+
+    def mean_rates(self, t0_h: float, t1_h: float) -> dict[str, float]:
+        """Time-averaged true tokens/s over the window ``[t0_h, t1_h]``.
+
+        This is what a live engine's ``windowed_rates()`` delta export
+        reports for the window: a shift landing mid-window shows up at its
+        time-weighted magnitude (and at full magnitude one window later),
+        unlike the instantaneous ``measure()`` probe. Piecewise-constant
+        integration over the shift breakpoints — exact, no sampling."""
+        if t1_h <= t0_h:
+            return self.rates_at(t1_h)
+        edges = [t0_h] + [s.at_h for s in self.shifts
+                          if t0_h < s.at_h < t1_h] + [t1_h]
+        span = t1_h - t0_h
+        out: dict[str, float] = {}
+        for sid in sorted(self.base_rates):
+            total = 0.0
+            for a, b in zip(edges, edges[1:]):
+                rate = self._rate(sid, a)
+                if rate is None:
+                    total = None
+                    break
+                total += rate * (b - a)
+            if total is not None:
+                out[sid] = total / span
+        return out
 
     def frame_rate_cap(self, stream_id: str, t_h: float) -> float:
         """Frames/s the serving layer sustains for this stream right now

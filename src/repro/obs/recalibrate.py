@@ -38,21 +38,26 @@ from repro.sim.ledger import ServiceCalibration
 class RecalibratingPolicy:
     """Drift-aware wrapper over an autoscaling policy (module doc above).
 
-    ``service`` is the measurement source: anything with ``measure(t) ->
-    {stream_id: tokens/s}`` and ``tokens_per_frame`` — the simulator's
-    :class:`~repro.obs.probe.DriftingService`, or a thin adapter over a real
-    engine's ``windowed_rates()``. The initial belief is ``calibration`` if
-    given, else the service's startup profile (``initial_calibration()``).
+    ``service`` is the ground truth (``tokens_per_frame``, the startup
+    profile); ``probe`` is the measurement source — anything with
+    ``measure(t) -> {stream_id: tokens/s}``. By default the service itself
+    is the probe (the exact instantaneous read); pass a
+    :class:`~repro.obs.regional.WindowedServiceProbe` for live
+    ``windowed_rates()`` delta-export semantics, or an adapter over real
+    engines. The initial belief is ``calibration`` if given, else the
+    service's startup profile (``initial_calibration()``).
     """
 
     def __init__(self, inner, service, *,
                  detector: Optional[DriftDetector] = None,
                  telemetry: Optional[TelemetryHub] = None,
                  tracer: Optional[Tracer] = None,
-                 calibration: Optional[ServiceCalibration] = None) -> None:
+                 calibration: Optional[ServiceCalibration] = None,
+                 probe=None) -> None:
         self.inner = inner
         self.name = f"recal-{inner.name}"
         self.service = service
+        self.probe = probe if probe is not None else service
         self.detector = detector or DriftDetector()
         self.telemetry = telemetry or TelemetryHub()
         self.tracer = tracer or Tracer()
@@ -104,7 +109,7 @@ class RecalibratingPolicy:
 
     def decide(self, t: float, streams: Sequence[Stream], *,
                preempted: bool = False) -> Plan:
-        measured = self.service.measure(t)
+        measured = self.probe.measure(t)
         verdict = self.detector.observe(t, measured, self.calibration)
         self.last_drift = verdict
         self.telemetry.emit(t, "drift.rel_error", verdict.rel_error)
@@ -136,4 +141,7 @@ class RecalibratingPolicy:
             if events:
                 sp.attrs["action"] = events[-1].action
                 sp.attrs["migrations"] = events[-1].migrations
+        # the span's wall clock is the solver's true cost — export it so a
+        # hub-side Histogram can report exact p50/p95/p99 per run
+        self.telemetry.emit(t, "replan.wall_ms", sp.wall_ms)
         return plan

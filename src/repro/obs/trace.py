@@ -48,6 +48,12 @@ class Tracer:
         t0 = time.perf_counter()
         try:
             yield sp
+        except BaseException as e:
+            # a failing body (a solver call blowing up mid-replan) still
+            # finalizes: mark the span, let the finally clause attach it to
+            # its parent, and re-raise — the rest of the trace survives
+            sp.attrs.setdefault("error", f"{type(e).__name__}: {e}")
+            raise
         finally:
             sp.wall_ms = (time.perf_counter() - t0) * 1e3
             self._stack.pop()

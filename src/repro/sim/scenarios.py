@@ -23,6 +23,10 @@ overrides (stream count, duration, seed) for scaling studies.
                           mid-day (``service`` carries the ground truth, an
                           ``obs.DriftingService``): the drift-detection /
                           online-recalibration scenario.
+* ``regional_drift``    — three-region fleet, the regression confined to
+                          one region (``groups`` maps streams to regions):
+                          the per-region drift / per-group recalibration
+                          scenario.
 """
 from __future__ import annotations
 
@@ -59,6 +63,9 @@ class Scenario:
     # ground-truth serving capacity (obs.DriftingService) for scenarios
     # whose service rates change over the day; None = unconstrained
     service: Optional[object] = None
+    # stream_id -> group (region) for per-group drift detection
+    # (obs.regional); None = no grouping defined
+    groups: Optional[dict] = None
 
     def catalog(self) -> Catalog:
         return self.catalog_factory()
@@ -202,6 +209,59 @@ def drifting_scene(n_streams: int = 72, duration_h: float = 24.0,
         service=service)
 
 
+def regional_drift(n_streams: int = 96, duration_h: float = 24.0,
+                   seed: int = 0, shift_at_h: float = 12.0,
+                   shift_factor: float = 0.2,
+                   drifted_camera: str = "tokyo") -> Scenario:
+    """Three-region fleet; the serving regression hits *one* region.
+
+    Cameras round-robin over nyc / london / tokyo, which map to three
+    distinct datacenter regions (us-east-1, eu-west-1, ap-northeast-1) —
+    the scenario's ``groups`` field carries that stream → region map. At
+    ``shift_at_h`` the true rates of the ``drifted_camera`` region's
+    streams are multiplied by ``shift_factor``; the other two regions stay
+    healthy. A per-region detector (``obs.RegionalDriftDetector``) should
+    fire in exactly one region and a per-group recalibration re-profile
+    only that third of the fleet; a fleet-wide detector sees the same
+    regression diluted across all streams (mean error ≈ 0.27 with the
+    defaults — still above the 0.25 threshold, so both designs fire and
+    ``benchmarks/obs_export.py`` can compare their repairs head-to-head).
+
+    Demand is deliberately *flat* (unlike ``drifting_scene``): with no
+    diurnal churn, every migration in the ledger traces to the
+    recalibration replan itself, so the benchmark's migration comparison
+    measures the repair scope and nothing else.
+    """
+    from repro.obs import DriftingService, RateShift
+    cameras = ("nyc", "london", drifted_camera)
+    specs = tuple(dataclasses.replace(c, base_fps=c.peak_fps)
+                  for c in _fleet(cameras, n_streams))
+    tokens_per_frame = 8.0
+    base_rates = {c.stream_id: (22.4 if c.program == "VGG16" else 64.0)
+                  for c in specs}
+    groups = {c.stream_id: geo.nearest_region(c.camera, sorted(geo.DATACENTERS))
+              for c in specs}
+    drifted_region = geo.nearest_region(drifted_camera,
+                                        sorted(geo.DATACENTERS))
+    drifted = frozenset(sid for sid, g in groups.items()
+                        if g == drifted_region)
+    service = DriftingService(base_rates,
+                              tokens_per_frame=tokens_per_frame,
+                              shifts=(RateShift(at_h=shift_at_h,
+                                                factor=shift_factor,
+                                                streams=drifted),))
+    return Scenario(
+        name="regional_drift",
+        demand=DiurnalFleet(specs),
+        config=SimConfig(duration_h=duration_h, seed=seed,
+                         spot_fraction=0.0),
+        description="three-region fleet; one region's true serving rates "
+                    "regress 80% at mid-day — the per-region drift / "
+                    "per-group recalibration scenario",
+        service=service,
+        groups=groups)
+
+
 def _replicated(specs: Sequence[CameraSpec], replicas: int = 2
                 ) -> tuple[CameraSpec, ...]:
     """Each camera spec split into ``replicas`` load-sharing replicas
@@ -267,6 +327,7 @@ SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "flash_crowd": flash_crowd,
     "churn_storm": churn_storm,
     "drifting_scene": drifting_scene,
+    "regional_drift": regional_drift,
     "mega_city": mega_city,
     "spot_bidder": spot_bidder,
 }

@@ -131,5 +131,9 @@ def test_ledger_totals_match_golden(scenario, policy):
         pytest.approx(totals["total_cost"], abs=5e-6)
     # legacy (hazard-governed) spot: no bid-based reclaims possible
     assert totals["outbids"] == 0
+    # the PR-6 telemetry columns are additive too: without a recalibrating
+    # policy they stay identically zero on the golden scenarios
+    assert totals["recalibrations"] == 0
+    assert totals["calib_max_rel_error"] == 0.0
     if (scenario, policy) in GOLDEN_HOURS:
         assert totals["instance_hours"] == GOLDEN_HOURS[(scenario, policy)]

@@ -227,3 +227,67 @@ def test_recalibrating_policy_clamps_planned_rates():
     assert clamped[1].fps == pytest.approx(1.0)   # under the cap: untouched
     plan = policy.decide(0, clamped)
     assert isinstance(plan, Plan)
+
+
+# -- subscriber isolation (hub) and error finalization (tracer) --------------
+
+def test_hub_isolates_raising_subscriber():
+    """One raising consumer must not abort the emit nor starve later
+    subscribers; the failure is recorded and delivery continues."""
+    hub = TelemetryHub()
+    before, after = [], []
+
+    def bomb(point):
+        raise RuntimeError("closed file")
+
+    hub.subscribe(before.append)
+    hub.subscribe(bomb)
+    hub.subscribe(after.append)
+    p1 = hub.emit(0.0, "fleet.cost.usd", 1.0)
+    p2 = hub.emit(1.0, "fleet.cost.usd", 2.0)
+    # every subscriber after the bomb still saw every point, in order
+    assert before == [p1, p2]
+    assert after == [p1, p2]
+    # the hub's own stream is unaffected
+    assert hub.series("fleet.cost.usd") == [(0.0, 1.0), (1.0, 2.0)]
+    # and each failed delivery was recorded (t, subscriber, error)
+    assert len(hub.subscriber_failures) == 2
+    t, who, err = hub.subscriber_failures[0]
+    assert t == 0.0
+    assert "bomb" in who
+    assert "RuntimeError: closed file" in err
+
+
+def test_tracer_finalizes_span_when_body_raises():
+    """A failing body still finalizes its span — error attr set, span
+    attached to its parent, exception re-raised — and the stack stays
+    intact for subsequent spans."""
+    tr = Tracer()
+    with pytest.raises(ValueError, match="solver blew up"):
+        with tr.span("recalibrate", t=3.0):
+            with tr.span("replan.decide", t=3.0):
+                raise ValueError("solver blew up")
+    # both spans finalized: the failed child is attached under its parent
+    assert len(tr.spans) == 1
+    root = tr.spans[0]
+    assert root.name == "recalibrate"
+    assert [c.name for c in root.children] == ["replan.decide"]
+    assert root.children[0].attrs["error"] == "ValueError: solver blew up"
+    # the parent saw the exception propagate through it too
+    assert root.attrs["error"] == "ValueError: solver blew up"
+    assert root.wall_ms >= root.children[0].wall_ms >= 0.0
+    # stack integrity: the tracer is reusable and nesting starts at root
+    with tr.span("replan.decide", t=4.0):
+        pass
+    assert [s.name for s in tr.spans] == ["recalibrate", "replan.decide"]
+    assert tr.spans[1].children == []
+    assert "error" not in tr.spans[1].attrs
+
+
+def test_tracer_explicit_error_attr_wins_over_finalizer():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("replan.decide") as sp:
+            sp.attrs["error"] = "already diagnosed"
+            raise RuntimeError("later failure")
+    assert tr.spans[0].attrs["error"] == "already diagnosed"

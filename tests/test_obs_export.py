@@ -1,0 +1,189 @@
+"""Exporter bridge: JSONL metric export, Chrome-trace export, and the
+Counter/Gauge/Histogram aggregation layer — every round trip lossless."""
+import io
+import json
+
+import pytest
+
+from repro.obs import (Counter, Gauge, Histogram, JsonlMetricExporter,
+                       MetricAggregator, TelemetryHub, Tracer, chrome_trace,
+                       hub_with_exporters, load_jsonl_metrics,
+                       spans_from_chrome_trace, write_chrome_trace)
+
+
+# -- JSONL metric export -----------------------------------------------------
+
+def _emit_some(hub):
+    hub.emit(0.0, "fleet.cost.usd", 12.5)
+    hub.emit(0.5, "drift.rel_error", 1 / 3, region="ap-northeast-1")
+    hub.emit(1.0, "fleet.slo", 0.987654321012345678)   # needs full precision
+    hub.emit(1.0, "fleet.instances.live", 7.0, market="spot", region="x")
+
+
+def test_jsonl_export_roundtrips_exactly(tmp_path):
+    path = tmp_path / "metrics.jsonl"
+    hub = TelemetryHub()
+    exporter = JsonlMetricExporter(path)
+    hub.subscribe(exporter)
+    _emit_some(hub)
+    exporter.close()
+    assert exporter.written == 4
+    # bit-exact round trip, attrs included
+    assert load_jsonl_metrics(path) == hub.points
+    # and the file is plain JSONL any external tool can read
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    assert rows[1]["attrs"] == {"region": "ap-northeast-1"}
+    assert rows[2]["value"] == 0.987654321012345678
+
+
+def test_jsonl_export_is_incremental_and_takes_file_objects():
+    buf = io.StringIO()
+    hub = TelemetryHub()
+    hub.subscribe(JsonlMetricExporter(buf))
+    hub.emit(0.0, "a", 1.0)
+    # already on the sink after one emit — no buffering, tail-able mid-run
+    assert buf.getvalue().count("\n") == 1
+    hub.emit(1.0, "b", 2.0)
+    assert load_jsonl_metrics(io.StringIO(buf.getvalue())) == hub.points
+
+
+def test_jsonl_exporter_context_manager_closes_owned_file(tmp_path):
+    path = tmp_path / "m.jsonl"
+    hub = TelemetryHub()
+    with JsonlMetricExporter(path) as exporter:
+        hub.subscribe(exporter)
+        hub.emit(0.0, "a", 1.0)
+    assert exporter._fh.closed
+    # a closed sink raises inside the subscriber; the hub isolates it
+    hub.emit(1.0, "b", 2.0)
+    assert len(hub.subscriber_failures) == 1
+    assert len(hub.points) == 2
+
+
+# -- Chrome-trace export -----------------------------------------------------
+
+def _traced():
+    tr = Tracer()
+    with tr.span("recalibrate", t=14.0, regions="ap-northeast-1") as sp:
+        with tr.span("replan.decide", t=14.0) as inner:
+            inner.attrs["action"] = "forced-replan"
+            inner.attrs["migrations"] = 8
+        sp.attrs["plan_cost_usd_per_h"] = 36.7
+    with tr.span("replan.decide", t=15.0):
+        pass
+    return tr
+
+
+def _spans_equal(a, b):
+    return (a.name == b.name and a.t == b.t and a.wall_ms == b.wall_ms
+            and a.attrs == b.attrs and len(a.children) == len(b.children)
+            and all(_spans_equal(x, y)
+                    for x, y in zip(a.children, b.children)))
+
+
+def test_chrome_trace_roundtrips_span_trees(tmp_path):
+    tr = _traced()
+    path = tmp_path / "trace.json"
+    n_events = write_chrome_trace(path, tr)
+    assert n_events == 6                       # 3 spans x paired B/E
+    rebuilt = spans_from_chrome_trace(path)
+    assert len(rebuilt) == len(tr.spans)
+    assert all(_spans_equal(x, y) for x, y in zip(rebuilt, tr.spans))
+
+
+def test_chrome_trace_event_stream_is_viewer_valid():
+    doc = chrome_trace(_traced())
+    events = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    # B/E discipline: nesting balanced, timestamps monotone per track,
+    # children contained within their parent's [B, E] window
+    stack = []
+    for e in events:
+        if e["ph"] == "B":
+            if stack:
+                assert e["ts"] >= stack[-1][1]           # starts after parent
+            stack.append((e["name"], e["ts"]))
+        else:
+            name, ts_b = stack.pop()
+            assert name == e["name"]
+            assert e["ts"] >= ts_b
+    assert not stack
+    # exact values ride in args, not in the synthesized timeline
+    begins = [e["args"] for e in events if e["ph"] == "B"]
+    assert begins[0]["t"] == 14.0                         # recalibrate
+    assert begins[1]["attrs"]["migrations"] == 8          # nested replan
+
+
+def test_chrome_trace_reader_rejects_unbalanced_documents():
+    doc = chrome_trace(_traced())
+    with pytest.raises(ValueError, match="unbalanced"):
+        spans_from_chrome_trace({"traceEvents": doc["traceEvents"][:-1]})
+    swapped = {"traceEvents": [
+        {"ph": "B", "name": "a", "args": {}},
+        {"ph": "E", "name": "b"}]}
+    with pytest.raises(ValueError, match="unbalanced"):
+        spans_from_chrome_trace(swapped)
+
+
+# -- aggregation layer -------------------------------------------------------
+
+def test_histogram_percentiles_are_exact_nearest_rank():
+    h = Histogram("replan.wall_ms")
+    assert h.percentile(0.5) is None
+    for v in [5.0, 1.0, 9.0, 3.0, 7.0]:        # unsorted on purpose
+        h.observe(v)
+    assert h.percentile(0.0) == 1.0
+    assert h.percentile(0.5) == 5.0
+    assert h.percentile(1.0) == 9.0
+    s = h.summary()
+    assert s["count"] == 5 and s["min"] == 1.0 and s["max"] == 9.0
+    assert s["mean"] == pytest.approx(5.0)
+    assert s["p50"] == 5.0 and s["p99"] == 9.0
+
+
+def test_counter_and_gauge_semantics():
+    c = Counter("fleet.preemptions")
+    c.observe(2.0)
+    c.observe(3.0)
+    assert c.summary() == {"kind": "counter", "total": 5.0, "points": 2}
+    g = Gauge("fleet.instances.live")
+    g.observe(4.0, t=0.0)
+    g.observe(6.0, t=1.0)
+    assert g.summary() == {"kind": "gauge", "value": 6.0, "t": 1.0,
+                           "points": 2}
+
+
+def test_aggregator_routes_by_name_and_rejects_type_conflicts():
+    hub = TelemetryHub()
+    agg = MetricAggregator(hub)
+    hist = agg.histogram("replan.wall_ms")
+    gauge = agg.gauge("fleet.slo")
+    hub.emit(0.0, "replan.wall_ms", 4.0)
+    hub.emit(0.0, "fleet.slo", 0.99)
+    hub.emit(0.0, "unregistered.metric", 1.0)   # passes through untouched
+    hub.emit(1.0, "replan.wall_ms", 8.0)
+    assert hist.values == [4.0, 8.0]
+    assert gauge.value == 0.99
+    # re-registering the same kind returns the same instrument
+    assert agg.histogram("replan.wall_ms") is hist
+    with pytest.raises(ValueError, match="already registered"):
+        agg.counter("replan.wall_ms")
+    summary = agg.summary()
+    assert set(summary) == {"replan.wall_ms", "fleet.slo"}
+    assert summary["replan.wall_ms"]["p50"] == 4.0   # nearest rank of 2
+    assert summary["replan.wall_ms"]["p99"] == 8.0
+
+
+def test_hub_with_exporters_wiring(tmp_path):
+    path = tmp_path / "m.jsonl"
+    hub, exporter, agg = hub_with_exporters(path)
+    hub.emit(0.0, "replan.wall_ms", 2.5)
+    hub.emit(0.0, "fleet.slo", 0.9)
+    exporter.close()
+    assert load_jsonl_metrics(path) == hub.points
+    assert agg.instruments["replan.wall_ms"].values == [2.5]
+    # no path: aggregation only
+    hub2, exporter2, agg2 = hub_with_exporters(None, histograms=("x",))
+    assert exporter2 is None
+    hub2.emit(0.0, "x", 1.0)
+    assert agg2.instruments["x"].values == [1.0]

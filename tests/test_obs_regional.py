@@ -1,0 +1,250 @@
+"""Per-region live drift and per-group recalibration: windowed probes,
+one detector streak per region, partial calibration merge, and the repair
+scope that keeps healthy regions' placements out of the blast radius."""
+import pytest
+
+from repro.core.manager import ResourceManager
+from repro.core.repair import RepairConfig, repair_plan
+from repro.core.workload import PROGRAMS, Stream
+from repro.obs import (DriftConfig, DriftingService, EngineWindowProbe,
+                       RateShift, RegionalDriftDetector,
+                       RegionalRecalibratingPolicy, WindowedServiceProbe,
+                       camera_region_groups)
+from repro.sim import FleetSimulator, RepairPolicy, SCENARIOS
+from repro.sim.ledger import ServiceCalibration
+
+
+def _calib(rates, default=None):
+    return ServiceCalibration(tokens_per_frame=8.0, rates_tokens_per_s=rates,
+                              default_rate=default)
+
+
+# -- windowed probe ----------------------------------------------------------
+
+def test_windowed_probe_time_averages_over_the_poll_window():
+    svc = DriftingService({"a": 64.0},
+                          shifts=(RateShift(at_h=12.0, factor=0.25),))
+    probe = WindowedServiceProbe(svc)
+    assert probe.measure(11.0) == {"a": 64.0}          # first poll: snapshot
+    assert probe.measure(11.5) == {"a": 64.0}          # pre-shift window
+    # window [11.5, 12.5] straddles the shift: half at 64, half at 16
+    assert probe.measure(12.5)["a"] == pytest.approx(40.0)
+    # next window is fully post-shift: full magnitude one poll later
+    assert probe.measure(13.5)["a"] == pytest.approx(16.0)
+
+
+def test_windowed_probe_forwards_service_identity():
+    svc = DriftingService({"a": 64.0}, tokens_per_frame=4.0)
+    probe = WindowedServiceProbe(svc)
+    assert probe.tokens_per_frame == 4.0
+    assert probe.initial_calibration().rates_tokens_per_s == {"a": 64.0}
+
+
+def test_mean_rates_integrates_piecewise_exactly():
+    svc = DriftingService({"a": 100.0, "b": 10.0},
+                          shifts=(RateShift(12.0, 0.5, frozenset({"a"})),
+                                  RateShift(14.0, 0.2, frozenset({"a"}))))
+    # [10, 15]: 2h at 100, 2h at 50, 1h at 10 -> 310/5 = 62; b untouched
+    rates = svc.mean_rates(10.0, 15.0)
+    assert rates["a"] == pytest.approx(62.0)
+    assert rates["b"] == pytest.approx(10.0)
+    # degenerate window falls back to the instantaneous snapshot
+    assert svc.mean_rates(13.0, 13.0)["a"] == pytest.approx(50.0)
+
+
+# -- engine bridge -----------------------------------------------------------
+
+class _FakeEngine:
+    def __init__(self, windowed, lifetime=None):
+        self._windowed = windowed
+        self._lifetime = lifetime if lifetime is not None else dict(windowed)
+
+    def windowed_rates(self):
+        return dict(self._windowed)
+
+    def measured_rates(self):
+        return dict(self._lifetime)
+
+
+def test_engine_window_probe_merges_regions_and_tracks_groups():
+    probe = EngineWindowProbe({
+        "us-east-1": _FakeEngine({"cam-a": 60.0}),
+        "ap-northeast-1": _FakeEngine({"cam-b": 12.0}),
+    }, tokens_per_frame=8.0)
+    measured = probe.measure(1.0)
+    assert measured == {"cam-a": 60.0, "cam-b": 12.0}
+    assert probe.group_of("cam-a") == "us-east-1"
+    assert probe.group_of("cam-b") == "ap-northeast-1"
+    assert probe.group_of("never-seen") == "unknown"
+    calib = probe.initial_calibration()
+    assert calib.rates_tokens_per_s == {"cam-a": 60.0, "cam-b": 12.0}
+    assert calib.default_rate == pytest.approx(36.0)
+
+
+# -- per-group detection -----------------------------------------------------
+
+def test_regional_detector_fires_only_the_drifted_group():
+    det = RegionalDriftDetector(
+        lambda sid: "tokyo" if sid.startswith("t") else "nyc",
+        DriftConfig(rel_threshold=0.25, hold_ticks=2))
+    calib = _calib({"t1": 64.0, "t2": 64.0, "n1": 64.0})
+    healthy = {"n1": 64.0}
+    drifted = {"t1": 12.8, "t2": 12.8}
+    v1 = det.observe(0.0, {**healthy, **drifted}, calib)
+    assert not v1.fired and v1.verdicts["tokyo"].streak == 1
+    v2 = det.observe(1.0, {**healthy, **drifted}, calib)
+    assert v2.fired_groups == ("tokyo",)
+    assert v2.verdicts["nyc"].streak == 0
+    # the aggregate error is stream-weighted: (0.8 * 2 + 0 * 1) / 3
+    assert v2.rel_error == pytest.approx(0.8 * 2 / 3)
+    assert v2.max_rel_error == pytest.approx(0.8)
+    assert v2.fired and v2.drifting and v2.streak == 2
+    assert det.fired_groups() == ("tokyo",)
+    # per-group reset clears only that group's streak
+    det.reset("tokyo")
+    v3 = det.observe(2.0, {**healthy, **drifted}, calib)
+    assert v3.verdicts["tokyo"].streak == 1 and not v3.fired
+
+
+def test_regional_detector_absent_group_keeps_its_streak():
+    """A region idle this window (no measurements) is no evidence — its
+    streak must survive, same convention as the fleet-wide detector."""
+    det = RegionalDriftDetector(lambda sid: sid[0],
+                                DriftConfig(hold_ticks=3),
+                                groups=("a", "b"))
+    calib = _calib({"a1": 64.0, "b1": 64.0})
+    det.observe(0.0, {"a1": 12.8}, calib)
+    det.observe(1.0, {"a1": 12.8}, calib)
+    v = det.observe(2.0, {"b1": 64.0}, calib)      # a silent, b healthy
+    assert v.verdicts["a"].streak == 2 and v.verdicts["a"].n_streams == 0
+    v = det.observe(3.0, {"a1": 12.8, "b1": 64.0}, calib)
+    assert v.fired_groups == ("a",)                # streak resumed at 3
+
+
+def test_regional_detector_dilution_vs_partition():
+    """The failure mode the per-group split exists for: one region's 0.8
+    error diluted across three regions stays under a 0.3 fleet threshold
+    forever, while the partitioned detector fires."""
+    from repro.obs import DriftDetector
+    cfg = DriftConfig(rel_threshold=0.3, hold_ticks=2)
+    calib = _calib({f"{g}{i}": 64.0 for g in "abc" for i in range(4)})
+    measured = {f"{g}{i}": (12.8 if g == "a" else 64.0)
+                for g in "abc" for i in range(4)}
+    fleet, regional = DriftDetector(cfg), RegionalDriftDetector(
+        lambda sid: sid[0], cfg)
+    for t in range(4):
+        fv = fleet.observe(float(t), measured, calib)
+        rv = regional.observe(float(t), measured, calib)
+    assert not fv.fired and fv.rel_error == pytest.approx(0.8 / 3)
+    assert rv.fired_groups == ("a",)
+
+
+# -- scoped repair -----------------------------------------------------------
+
+def _streams(n, camera, fps, prefix):
+    return [Stream(f"{prefix}-{i}", PROGRAMS["ZF"], fps=fps, camera=camera)
+            for i in range(n)]
+
+
+def test_repair_scope_restricts_consolidation_and_defrag():
+    from repro.core import fig6_catalog
+    cat = fig6_catalog()
+    before = _streams(9, "nyc", 6.0, "ny") + _streams(9, "tokyo", 6.0, "tk")
+    first = repair_plan(before, cat).plan
+    # tokyo's demand collapses: its bins now have closable slack, and so
+    # would any unscoped consolidation pass see them
+    after = _streams(9, "nyc", 6.0, "ny") + _streams(9, "tokyo", 0.5, "tk")
+    scope = frozenset(s.stream_id for s in after if s.camera == "tokyo")
+    cfg = RepairConfig(migration_budget=18, defrag_ratio=None)
+    unscoped = repair_plan(after, cat, previous=first, config=cfg)
+    scoped = repair_plan(after, cat, previous=first, config=cfg, scope=scope)
+    assert scoped.plan.solution.cost <= unscoped.plan.solution.cost + 1e-9
+    # scoped consolidation moved only tokyo streams
+    moved_scoped = _moved(first, scoped.plan)
+    assert moved_scoped and moved_scoped <= scope
+    # the unscoped pass is free to touch nyc placements too
+    assert _moved(first, unscoped.plan) >= moved_scoped
+
+
+def _moved(old, new):
+    from repro.core.repair import plan_assignment
+    a, b = plan_assignment(old), plan_assignment(new)
+    return {k for k, v in b.items() if k in a and a[k] != v}
+
+
+def test_repair_scope_skips_defrag_hatch():
+    from repro.core import fig6_catalog
+    cat = fig6_catalog()
+    before = _streams(12, "nyc", 6.0, "ny")
+    first = repair_plan(before, cat).plan
+    after = _streams(12, "nyc", 0.5, "ny")
+    # no budget, aggressive hatch: the unscoped repair defrags wholesale
+    cfg = RepairConfig(migration_budget=None, defrag_ratio=1.05)
+    unscoped = repair_plan(after, cat, previous=first, config=cfg)
+    assert unscoped.defrag
+    scoped = repair_plan(after, cat, previous=first, config=cfg,
+                         scope=frozenset(s.stream_id for s in after))
+    assert not scoped.defrag
+
+
+# -- per-group recalibration end to end --------------------------------------
+
+def test_regional_policy_recalibrates_only_the_fired_group():
+    sc = SCENARIOS["regional_drift"](n_streams=24, duration_h=24.0)
+    cat = sc.catalog()
+    policy = RegionalRecalibratingPolicy(
+        RepairPolicy(ResourceManager(cat), migration_budget=6,
+                     defrag_ratio=1.25),
+        sc.service, group_of=sc.groups.__getitem__)
+    ledger = FleetSimulator(sc.demand, policy, cat, sc.config,
+                            service=sc.service,
+                            telemetry=policy.telemetry).run()
+    # exactly one recalibration, scoped to the drifted region
+    assert len(policy.recal_groups) == 1
+    t_fired, groups = policy.recal_groups[0]
+    assert groups == ("ap-northeast-1",)
+    assert policy.regional.fired_groups() == ("ap-northeast-1",)
+    # healthy regions kept their startup profile; the drifted group's
+    # streams adopted the measured (regressed) rates
+    for sid, g in sc.groups.items():
+        rate = policy.calibration.rates_tokens_per_s[sid]
+        truth = sc.service.rates_at(23.0)[sid]
+        if g == "ap-northeast-1":
+            assert rate == pytest.approx(truth)
+        else:
+            assert rate == pytest.approx(
+                sc.service.initial_calibration().rates_tokens_per_s[sid])
+    # the ledger recorded it and per-region telemetry was emitted
+    assert ledger.totals()["recalibrations"] == 1
+    regions = {p.attr("region") for p in policy.telemetry.points
+               if p.name == "drift.rel_error" and p.attr("region")}
+    assert regions == set(sc.groups.values())
+
+
+def test_camera_region_groups_maps_streams_by_camera():
+    streams = [Stream("a", PROGRAMS["ZF"], fps=1.0, camera="nyc"),
+               Stream("b", PROGRAMS["ZF"], fps=1.0, camera="tokyo"),
+               Stream("c", PROGRAMS["ZF"], fps=1.0, camera=None)]
+    groups = camera_region_groups(streams)
+    assert groups["a"] == "us-east-1"
+    assert groups["b"] == "ap-northeast-1"
+    assert groups["c"] == "unknown"
+
+
+def test_regional_drift_scenario_shape():
+    sc = SCENARIOS["regional_drift"](n_streams=12)
+    assert sc.groups is not None and len(sc.groups) == 12
+    assert sorted(set(sc.groups.values())) == [
+        "ap-northeast-1", "eu-west-1", "us-east-1"]
+    drifted = {sid for sid, g in sc.groups.items()
+               if g == "ap-northeast-1"}
+    # the regression is scoped to exactly the drifted region's streams
+    (shift,) = sc.service.shifts
+    assert shift.streams == drifted
+    post = sc.service.rates_at(shift.at_h)
+    pre = sc.service.rates_at(0.0)
+    for sid in sc.groups:
+        if sid in drifted:
+            assert post[sid] == pytest.approx(pre[sid] * shift.factor)
+        else:
+            assert post[sid] == pre[sid]

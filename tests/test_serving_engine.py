@@ -238,6 +238,86 @@ def test_windowed_rates_delta_export():
     assert set(second) == {"cam-1"}
 
 
+def test_windowed_rates_consecutive_polls_partition_exactly():
+    """Two consecutive polls split the completion stream with no token
+    counted twice and none dropped: rate x span per window recovers the
+    per-stream token deltas, and the windows sum to the lifetime tally."""
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2,
+                                   cache_len=CACHE_LEN)
+    rng = np.random.default_rng(21)
+    toks = lambda: rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+
+    eng.submit(Request("r0", toks(), max_new_tokens=6, stream_id="cam-0"))
+    eng.drain()
+    wall_0 = eng._rate_snapshot[0]
+    first = eng.windowed_rates()
+    wall_1, tokens_1 = eng._rate_snapshot
+
+    eng.submit(Request("r1", toks(), max_new_tokens=4, stream_id="cam-0"))
+    eng.submit(Request("r2", toks(), max_new_tokens=5, stream_id="cam-1"))
+    eng.drain()
+    second = eng.windowed_rates()
+    wall_2, tokens_2 = eng._rate_snapshot
+
+    span_1, span_2 = wall_1 - wall_0, wall_2 - wall_1
+    # window 1: only cam-0 traffic, and rate x span is its exact tally
+    assert set(first) == {"cam-0"}
+    assert first["cam-0"] * span_1 == pytest.approx(tokens_1["cam-0"])
+    # window 2 carries exactly the deltas since the first poll
+    assert set(second) == {"cam-0", "cam-1"}
+    assert second["cam-0"] * span_2 == pytest.approx(
+        tokens_2["cam-0"] - tokens_1["cam-0"])
+    assert second["cam-1"] * span_2 == pytest.approx(tokens_2["cam-1"])
+    # partition exactness: the two windows reassemble the lifetime tally
+    for sid in ("cam-0", "cam-1"):
+        assert (first.get(sid, 0.0) * span_1 + second.get(sid, 0.0) * span_2
+                == pytest.approx(tokens_2[sid]))
+
+
+def test_windowed_rates_empty_window_is_empty_dict():
+    """A poll window with no completions must return {} — silence is "no
+    data" for the drift detector, never a fleet of zero-rate streams."""
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2,
+                                   cache_len=CACHE_LEN)
+    # before any traffic at all (wall clock never advanced)
+    assert eng.windowed_rates() == {}
+    rng = np.random.default_rng(22)
+    eng.submit(Request("r0", rng.integers(0, cfg.vocab_size, PROMPT_LEN)
+                       .astype(np.int32), max_new_tokens=4,
+                       stream_id="cam-0"))
+    eng.drain()
+    assert set(eng.windowed_rates()) == {"cam-0"}
+    # idle window: {} (not {"cam-0": 0.0}) even though the stream is known
+    assert eng.windowed_rates() == {}
+    assert eng.windowed_rates() == {}
+
+
+def test_windowed_rates_departing_stream_lands_in_final_window():
+    """A stream retiring mid-window is attributed to the window covering
+    its completion, then disappears from later windows entirely."""
+    cfg, params = _setup()
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2,
+                                   cache_len=CACHE_LEN)
+    rng = np.random.default_rng(23)
+    toks = lambda: rng.integers(0, cfg.vocab_size, PROMPT_LEN).astype(np.int32)
+    # "departs" retires after 2 tokens while "stays" keeps decoding past it
+    eng.submit(Request("d0", toks(), max_new_tokens=2, stream_id="departs"))
+    eng.submit(Request("s0", toks(), max_new_tokens=8, stream_id="stays"))
+    eng.drain()
+    window = eng.windowed_rates()
+    # the departed stream's final tokens are in this window...
+    assert set(window) == {"departs", "stays"}
+    span = eng._rate_snapshot[0]
+    assert window["departs"] * span == pytest.approx(
+        eng._stream_tokens["departs"])
+    # ...and it is absent (not zero) from every window after its departure
+    eng.submit(Request("s1", toks(), max_new_tokens=3, stream_id="stays"))
+    eng.drain()
+    assert set(eng.windowed_rates()) == {"stays"}
+
+
 class _CollectingEngine:
     """submit()-only stand-in so StreamSimulator runs without a model."""
 
