@@ -1,0 +1,143 @@
+"""Benchmark (BEYOND-PAPER): continent-scale columnar fleet-state gate.
+
+Gates the struct-of-arrays event loop (columnar demand + array placement
+ledger + batched event processing, see ``repro.sim.fleet``) against the
+object path it replaced:
+
+* **parity**: full-day ledgers of the ``continent_scale`` shape must be
+  *bit-identical* between ``FleetSimulator(columnar=True)`` and
+  ``columnar=False`` at 1k and 10k streams (``Ledger.signature()``
+  equality — every record and every total, to the bit);
+* **spot parity**: the same equality on a spot-heavy variant (preemption /
+  outbid batches landing mid-interval) at 1k streams;
+* **wall-clock**: the 24 h x 1,000,000-stream ``continent_scale`` day under
+  the reactive policy must finish within ``WALL_BUDGET_S``.
+
+``main()`` writes a JSON summary (CI uploads it as an artifact) and exits
+non-zero if any gate fails; ``run()`` returns the harness row format.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import dataclasses
+
+from repro.core.manager import ResourceManager
+from repro.sim import FleetSimulator, ReactivePolicy, SCENARIOS
+
+PARITY_SIZES = (1_000, 10_000)
+SCALE_STREAMS = 1_000_000
+WALL_BUDGET_S = 600.0
+
+
+def _simulate(scenario, columnar):
+    cat = scenario.catalog()
+    policy = ReactivePolicy(ResourceManager(cat))
+    return FleetSimulator(scenario.demand, policy, cat, scenario.config,
+                          columnar=columnar).run()
+
+
+def run() -> list[dict]:
+    rows = []
+    summary: dict = {"parity": {}, "gates": {}}
+
+    # -- parity: columnar vs object ledgers, bit for bit -------------------
+    for n in PARITY_SIZES:
+        t0 = time.perf_counter()
+        sc = SCENARIOS["continent_scale"](n_streams=n)
+        led_c = _simulate(sc, columnar=True)
+        led_o = _simulate(sc, columnar=False)
+        ok = led_c.signature() == led_o.signature()
+        us = (time.perf_counter() - t0) * 1e6
+        summary["parity"][f"ledger_{n}"] = bool(ok)
+        rows.append({
+            "name": f"columnar_parity_{n}", "us_per_call": us,
+            "derived": f"24h ledger bit-identical columnar vs object "
+                       f"({n} streams)" if ok
+                       else f"LEDGER MISMATCH at {n} streams",
+            "match_paper": ok})
+
+    # -- parity under preemption batches: spot-heavy variant ---------------
+    t0 = time.perf_counter()
+    sc = SCENARIOS["continent_scale"](n_streams=1_000)
+    sc = dataclasses.replace(sc, config=dataclasses.replace(
+        sc.config, spot_fraction=0.7, preempt_hazard_per_h=0.15))
+    led_c = _simulate(sc, columnar=True)
+    led_o = _simulate(sc, columnar=False)
+    ok_spot = led_c.signature() == led_o.signature()
+    ok_spot = ok_spot and led_c.preemptions > 0   # the gate must exercise them
+    us = (time.perf_counter() - t0) * 1e6
+    summary["parity"]["ledger_1k_spot"] = bool(ok_spot)
+    rows.append({
+        "name": "columnar_parity_1k_spot", "us_per_call": us,
+        "derived": f"24h spot ledger bit-identical with "
+                   f"{led_c.preemptions} preemptions" if ok_spot
+                   else "SPOT LEDGER MISMATCH (or no preemptions) at 1k",
+        "match_paper": ok_spot})
+    all_parity = all(summary["parity"].values())
+    summary["gates"]["parity"] = bool(all_parity)
+
+    # -- the continent_scale day at full scale -----------------------------
+    sc = SCENARIOS["continent_scale"](n_streams=SCALE_STREAMS)
+    t0 = time.perf_counter()
+    led = _simulate(sc, columnar=True)
+    wall = time.perf_counter() - t0
+    ok_wall = wall < WALL_BUDGET_S
+    summary["continent_scale"] = {
+        "streams": SCALE_STREAMS, "duration_h": sc.config.duration_h,
+        "wall_s": round(wall, 1), "budget_s": WALL_BUDGET_S,
+        "total_cost": round(led.total_cost, 2),
+        "slo_attainment": round(led.slo_attainment(), 4),
+        "migrations": led.migrations,
+        "peak_instances": max(r.instances_live for r in led.records),
+    }
+    summary["gates"]["wall_clock"] = bool(ok_wall)
+    rows.append({
+        "name": "columnar_continent_scale", "us_per_call": wall * 1e6,
+        "derived": f"24h x 1M streams in {wall:.1f}s (budget "
+                   f"{WALL_BUDGET_S:.0f}s) ${led.total_cost:.0f} "
+                   f"SLO {led.slo_attainment():.4f} "
+                   f"peak {summary['continent_scale']['peak_instances']} "
+                   f"instances",
+        "match_paper": ok_wall,
+    })
+
+    run._summary = summary          # stashed for main()'s JSON artifact
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, metavar="JSON",
+                    help="write the machine-readable summary here")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    rows = run()
+    failed = [r["name"] for r in rows if r.get("match_paper") is False]
+    for r in rows:
+        tag = {True: "  [OK]", False: "  [FAIL]"}.get(r.get("match_paper"), "")
+        print(f"{r['name']:28s} {r['derived']}{tag}")
+    summary = run._summary
+    summary["total_s"] = round(time.perf_counter() - t0, 1)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+        print(f"summary written to {args.out}")
+    if failed:
+        print(f"GATES FAILED: {', '.join(failed)}")
+        sys.exit(1)
+    print(f"acceptance ok in {summary['total_s']}s")
+
+
+if __name__ == "__main__":
+    main()

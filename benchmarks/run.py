@@ -42,6 +42,8 @@ _SUITES: list[tuple[str, str, str]] = [
      "(beyond-paper)", "drift_recalibration"),
     ("scale_sweep", "scale sweep: 100/1k/10k streams, packed vs scalar "
      "(beyond-paper)", "scale_sweep"),
+    ("columnar_sweep", "columnar sweep: 1M-stream day, columnar vs object "
+     "event loop (beyond-paper)", "columnar_sweep"),
     ("obs_export", "observability exporters + per-group recalibration "
      "(beyond-paper)", "obs_export"),
     ("kernels", "pallas kernels (interpret-mode validation)",

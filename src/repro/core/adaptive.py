@@ -19,9 +19,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional, Sequence
 
+import numpy as np
+
 from repro.core.catalog import Catalog
 from repro.core.manager import ResourceManager
-from repro.core.packing import Infeasible, fits
+from repro.core.packed import get_packed
+from repro.core.packing import EPS, Infeasible, fits
+from repro.core.workload import requirement_columns
 from repro.core.repair import (RepairConfig, RepairResult,
                                count_plan_migrations, repair_plan)
 from repro.core.strategies import Plan
@@ -132,6 +136,9 @@ class AdaptiveManager:
         has never placed (fleet churn: a camera that just came online) makes
         the plan infeasible — something must host it.
         """
+        fast = self._plan_feasible_cols(plan, streams)
+        if fast is not None:
+            return fast
         by_key = {s.stream_id: s for s in streams}
         placed = {plan.problem.items[i].key
                   for b in plan.solution.bins for i in b.items}
@@ -153,6 +160,80 @@ class AdaptiveManager:
                     return False
                 used = [u + r for u, r in zip(used, req)]
         return True
+
+    def _plan_feasible_cols(self, plan: Plan, streams) -> Optional[bool]:
+        """Columnar twin of the scalar walk above; None = preconditions not
+        met, fall back to the per-item loop.
+
+        Preconditions: the plan's problem carries packed arrays plus the
+        ``packed_ids`` list, and ``streams`` is a StreamColumns built over
+        *that same list object* — identity means the stream set is unchanged
+        (only the fps column moved), so the "every stream placed" check
+        reduces to the coverage the plan was validated with. Equivalence of
+        the capacity check is exact, not approximate: the scalar ``fits``
+        prefix sums are monotone nondecreasing (non-negative requirement
+        vectors), so every per-item check passes iff the *final* per-bin
+        per-dim total — accumulated in the same item order by ``bincount``,
+        hence the same float — is within ``cap + EPS``."""
+        pp = get_packed(plan.problem)
+        ids = getattr(plan.problem, "packed_ids", None)
+        if (pp is None or ids is None
+                or getattr(streams, "ids", None) is not ids):
+            return None
+        bins = plan.solution.bins
+        nb = len(bins)
+        lengths = np.fromiter((len(b.items) for b in bins),
+                              dtype=np.int64, count=nb)
+        total = int(lengths.sum()) if nb else 0
+        if total != len(ids):
+            return None
+        if total == 0:
+            return True
+        fps = streams.fps
+        pcodes = streams.program_codes
+        puniq = streams.programs_unique
+        uf = np.unique(fps)
+        combo = (pcodes.astype(np.int64) * len(uf)
+                 + np.searchsorted(uf, fps))
+        _, first, cls = np.unique(combo, return_index=True,
+                                  return_inverse=True)
+
+        choices = plan.problem.choices
+        catalog = self.manager.catalog
+        types: list = []
+        tidx: dict[str, int] = {}
+        tcode = np.empty(len(choices), dtype=np.int64)
+        for c, ch in enumerate(choices):
+            ti = tidx.get(ch.type_name)
+            if ti is None:
+                ti = len(types)
+                tidx[ch.type_name] = ti
+                types.append(catalog.get(ch.type_name))
+            tcode[c] = ti
+        D = pp.ndim
+        reqmat = np.full((len(first), len(types), D), np.inf)
+        for g, i0 in enumerate(first.tolist()):
+            rep = Stream(stream_id="_feas",
+                         program=puniq[int(pcodes[i0])],
+                         fps=float(fps[i0]))
+            for ti, r in enumerate(requirement_columns(rep, types, None)):
+                if r is not None:
+                    reqmat[g, ti] = r
+
+        flat = np.fromiter((i for b in bins for i in b.items),
+                           dtype=np.int64, count=total)
+        item_bin = np.repeat(np.arange(nb, dtype=np.int64), lengths)
+        bchoice = np.fromiter((b.choice for b in bins),
+                              dtype=np.int64, count=nb)
+        reqv = reqmat[cls[flat], tcode[bchoice[item_bin]]]   # (total, D)
+        if not np.isfinite(reqv).all():
+            return False                      # some stream lost compatibility
+        used = np.empty((nb, D))
+        for d in range(D):
+            used[:, d] = np.bincount(item_bin, weights=reqv[:, d],
+                                     minlength=nb)
+        cap = pp.capacity[bchoice]
+        return bool((used <= cap + EPS).all())
 
     def _candidate(self, streams: Sequence[Stream],
                    scope: Optional[frozenset] = None

@@ -35,13 +35,14 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+from collections.abc import Sequence
 from typing import Optional
 
 import numpy as np
 
 from repro.core import geo
 from repro.core.packing import EPS, Bin, Infeasible, Item, Problem
-from repro.core.workload import requirement_columns
+from repro.core.workload import Stream, requirement_columns
 
 # ---------------------------------------------------------------------------
 # Global switch: the scalar (pre-refactor) path stays available for parity
@@ -162,6 +163,127 @@ def _class_arrays(class_reqs: list[tuple], capacity: np.ndarray,
     return req, compat, has_compat, size, kmax
 
 
+class _PackedItemSeq(Sequence):
+    """Lazy ``problem.items``: Item views over (stream id, class) columns.
+
+    At a million streams, materializing N ``Item`` objects per replan is
+    the dominant cost of building a problem — and the packed pipeline never
+    looks at them (FFD runs on the arrays; reconcile uses ``packed_ids``).
+    This sequence constructs an ``Item`` only when some object-path consumer
+    actually indexes it; all items of a class share one requirements tuple,
+    exactly like the eager builder. ``distinct_requirements()`` hands
+    ``Problem.__post_init__`` the per-class tuples so validation stays
+    O(classes x choices) without touching any item."""
+
+    __slots__ = ("_ids", "_cls", "_reqs")
+
+    def __init__(self, ids, item_class, class_reqs) -> None:
+        self._ids = ids
+        self._cls = item_class
+        self._reqs = class_reqs
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[k] for k in range(*i.indices(len(self._ids)))]
+        return Item(key=self._ids[i], requirements=self._reqs[self._cls[i]])
+
+    def distinct_requirements(self):
+        return self._reqs
+
+
+def _build_items_from_columns(streams, choices, metas, target_fps,
+                              rtt_filter, types, type_ids) -> Problem:
+    """Column-native twin of the per-stream class grouping below: factorize
+    (program, fps, camera) by integer codes instead of hashing N Python
+    tuples. Class/group *numbering* differs from the eager builder (sorted
+    by code, not first appearance) — provably irrelevant: the FFD order is a
+    stable sort on per-item sizes, runs/blocks/opening decisions depend only
+    on class identity patterns and contents, and requirement floats come
+    from the same ``requirement_columns`` / ``max_fps_cached`` calls."""
+    n = len(streams)
+    puniq = streams.programs_unique
+    cuniq = streams.cameras_unique
+    pcodes = streams.program_codes
+    if target_fps is not None:
+        fps = np.full(n, float(target_fps))
+    else:
+        fps = streams.fps
+    camk = streams.camera_codes if rtt_filter \
+        else np.full(n, -1, dtype=np.int64)
+
+    uf = np.unique(fps)
+    fcode = np.searchsorted(uf, fps)
+    combo = ((pcodes.astype(np.int64) * (len(cuniq) + 1) + (camk + 1))
+             * len(uf) + fcode)
+    _, first, item_class = np.unique(combo, return_index=True,
+                                     return_inverse=True)
+    item_class = item_class.astype(np.int64, copy=False)
+    G = len(first)
+    cls_p = pcodes[first]
+    cls_f = fps[first]
+    cls_cam = camk[first]
+
+    gcombo = cls_p.astype(np.int64) * len(uf) + fcode[first]
+    _, gfirst, class_group = np.unique(gcombo, return_index=True,
+                                       return_inverse=True)
+    class_group = class_group.astype(np.int64, copy=False)
+
+    group_per_choice: list[list] = []
+    for g2 in gfirst.tolist():
+        rep = Stream(stream_id="_class", program=puniq[int(cls_p[g2])],
+                     fps=float(cls_f[g2]))
+        by_type = requirement_columns(rep, types, target_fps)
+        group_per_choice.append(
+            [by_type[type_ids[id(t)]] for (t, _loc) in metas])
+
+    class_reqs: list[tuple] = []
+    for g in range(G):
+        base = group_per_choice[int(class_group[g])]
+        ck = int(cls_cam[g])
+        if rtt_filter and ck >= 0:
+            cam = cuniq[ck]
+            f = float(cls_f[g]) if target_fps is None else target_fps
+            per_choice = [None if (req is not None
+                                   and max_fps_cached(cam, loc) < f)
+                          else req
+                          for req, (_t, loc) in zip(base, metas)]
+            class_reqs.append(tuple(per_choice))
+        else:
+            class_reqs.append(tuple(base))
+
+    items = _PackedItemSeq(streams.ids, item_class, class_reqs)
+    problem = Problem(choices=tuple(choices), items=items)
+    _attach_packed(problem, item_class, class_reqs, choices,
+                   class_group, group_per_choice)
+    object.__setattr__(problem, "packed_ids", streams.ids)
+    return problem
+
+
+def _attach_packed(problem: Problem, item_class, class_reqs, choices,
+                   class_group, group_per_choice) -> None:
+    capacity = np.array([c.capacity for c in choices], dtype=np.float64)
+    prices = np.array([c.price for c in choices], dtype=np.float64)
+    req, compat, has_compat, size, kmax = _class_arrays(
+        class_reqs, capacity, prices)
+    C, D = capacity.shape
+    group_req = np.full((len(group_per_choice), C, D), np.inf)
+    for g2, per_choice in enumerate(group_per_choice):
+        for c, r in enumerate(per_choice):
+            if r is not None:
+                group_req[g2, c] = r
+    packed = PackedProblem(item_class=item_class, class_req=req,
+                           class_compat=compat, class_has_compat=has_compat,
+                           class_size=size, class_kmax=kmax,
+                           capacity=capacity, prices=prices,
+                           class_group=np.asarray(class_group,
+                                                  dtype=np.int64),
+                           group_req=group_req)
+    object.__setattr__(problem, "packed", packed)
+
+
 def build_packed_items(streams, choices, metas, target_fps,
                        rtt_filter) -> Problem:
     """Columnwise item construction: group streams into requirement classes,
@@ -177,6 +299,13 @@ def build_packed_items(streams, choices, metas, target_fps,
         if id(t) not in type_ids:
             type_ids[id(t)] = len(types)
             types.append(t)
+
+    if getattr(streams, "program_codes", None) is not None:
+        # columnar demand (StreamColumns): factorize by codes, skip the
+        # N-item materialization entirely
+        return _build_items_from_columns(streams, choices, metas,
+                                         target_fps, rtt_filter,
+                                         types, type_ids)
 
     class_of: dict[tuple, int] = {}
     class_rep: list = []                 # representative stream per class
@@ -218,23 +347,11 @@ def build_packed_items(streams, choices, metas, target_fps,
     items = tuple(Item(key=s.stream_id, requirements=class_reqs[g])
                   for s, g in zip(streams, item_class))
     problem = Problem(choices=tuple(choices), items=items)
-
-    capacity = np.array([c.capacity for c in choices], dtype=np.float64)
-    prices = np.array([c.price for c in choices], dtype=np.float64)
-    req, compat, has_compat, size, kmax = _class_arrays(
-        class_reqs, capacity, prices)
-    C, D = capacity.shape
-    group_req = np.full((len(group_per_choice), C, D), np.inf)
-    for g2, per_choice in enumerate(group_per_choice):
-        for c, r in enumerate(per_choice):
-            if r is not None:
-                group_req[g2, c] = r
-    packed = PackedProblem(item_class=item_class, class_req=req,
-                           class_compat=compat, class_has_compat=has_compat,
-                           class_size=size, class_kmax=kmax,
-                           capacity=capacity, prices=prices,
-                           class_group=class_group, group_req=group_req)
-    object.__setattr__(problem, "packed", packed)
+    _attach_packed(problem, item_class, class_reqs, choices,
+                   class_group, group_per_choice)
+    ids = getattr(streams, "ids", None)
+    if ids is not None:
+        object.__setattr__(problem, "packed_ids", ids)
     return problem
 
 
@@ -269,17 +386,27 @@ def augment_problem_with_spot(base: Problem,
     if not spot_choices:
         return base
 
-    extended: dict[int, tuple] = {}          # id(base tuple) -> shared tuple
-    items = []
-    for it in base.items:
-        reqs = extended.get(id(it.requirements))
-        if reqs is None:
-            reqs = it.requirements + tuple(
-                it.requirements[c] for c in spot_src)
-            extended[id(it.requirements)] = reqs
-        items.append(Item(key=it.key, requirements=reqs))
+    if isinstance(base.items, _PackedItemSeq):
+        # lazy items: extend the per-class tuples, never touch the N items
+        ext = [r + tuple(r[c] for c in spot_src)
+               for r in base.items.distinct_requirements()]
+        items = _PackedItemSeq(base.items._ids, base.items._cls, ext)
+    else:
+        extended: dict[int, tuple] = {}      # id(base tuple) -> shared tuple
+        items = []
+        for it in base.items:
+            reqs = extended.get(id(it.requirements))
+            if reqs is None:
+                reqs = it.requirements + tuple(
+                    it.requirements[c] for c in spot_src)
+                extended[id(it.requirements)] = reqs
+            items.append(Item(key=it.key, requirements=reqs))
+        items = tuple(items)
     problem = Problem(choices=base.choices + tuple(spot_choices),
-                      items=tuple(items))
+                      items=items)
+    ids = getattr(base, "packed_ids", None)
+    if ids is not None:
+        object.__setattr__(problem, "packed_ids", ids)
 
     pp = get_packed(base)
     if pp is not None:
@@ -448,36 +575,67 @@ def ffd_pack_packed(problem: Problem, pp: PackedProblem, bins: list[Bin],
         bchoice = np.concatenate([bchoice, np.zeros_like(bchoice)])
 
     n_preexisting = len(bins)
+    # Per-class first-fit cursors. First-fit scans bins in index order, and
+    # a bin only ever *gains* load during a pack — once it fails to fit a
+    # class it never fits that class again. Each class therefore keeps an
+    # ordered queue of not-yet-rejected candidate bins plus a high-water
+    # mark of how far it has scanned; every (class, bin) pair is examined
+    # O(1) times. Without this, interleaved equal-size classes fragment the
+    # order into near-single-item runs and a fresh every-run scan over all
+    # open bins turns the pack quadratic (hours at 10^6 streams). Inner
+    # fills run on Python floats — IEEE-identical to the numpy elementwise
+    # ops, an order of magnitude faster per 4-vector.
+    state: dict[int, list] = {}      # g -> [candidate bins, ptr, scanned]
+    kmax_of = pp.class_kmax.max(axis=1)       # head saturation thresholds
     pos = 0                                   # global index into `order`
     for ri in range(n_runs):
         g = run_class[ri]
         n = run_len[ri]
-        run_items = order[pos:pos + n]
+        run_items = order[pos:pos + n].tolist()
         reqs_c = pp.class_req[g]              # (C, D)
         k = 0
 
-        if nb:
-            fit = np.flatnonzero(
-                (bused[:nb] + reqs_c[bchoice[:nb]]
-                 <= bcap[:nb] + EPS).all(axis=1))
-        else:
-            fit = ()
-        for b in fit:
-            if k >= n:
-                break
-            b = int(b)
-            r = reqs_c[bchoice[b]]
-            ub, cb = bused[b], bcap[b]
+        st = state.get(g)
+        if st is None:
+            st = state[g] = [[], 0, 0]
+        cands, ptr, scanned = st
+        while k < n:
+            if ptr >= len(cands):
+                if scanned >= nb:
+                    break
+                # scan only bins appended since this class last looked
+                m = (bused[scanned:nb] + reqs_c[bchoice[scanned:nb]]
+                     <= bcap[scanned:nb] + EPS).all(axis=1)
+                fresh = (scanned + np.flatnonzero(m)).tolist()
+                scanned = nb
+                if not fresh:
+                    continue                   # next pass breaks
+                cands = fresh
+                ptr = 0
+            b = cands[ptr]
+            rt = reqs_c[bchoice[b]].tolist()
+            ubt = bused[b].tolist()
+            cbt = (bcap[b] + EPS).tolist()
             blist = bins[b].items
-            while k < n and (ub + r <= cb + EPS).all():
-                blist.append(int(run_items[k]))
-                ub += r
+            filled = False
+            while k < n:
+                nt = [u + x for u, x in zip(ubt, rt)]
+                if not all(v <= c for v, c in zip(nt, cbt)):
+                    break
+                blist.append(run_items[k])
+                ubt = nt
+                filled = True
                 k += 1
+            if filled:
+                bused[b] = ubt
+            if k < n:
+                ptr += 1                       # saturated/unfitting for g
+        st[0], st[1], st[2] = cands, ptr, scanned
 
         # nothing open fits the rest of the run: open bins by the
         # cost-efficiency rule, reusing the decision while it cannot change
         cached_choice: Optional[int] = None
-        thr = float(pp.class_kmax[g].max())   # head saturation threshold
+        thr = float(kmax_of[g])               # head saturation threshold
         while k < n:
             head = n - k
             if cached_choice is not None and head >= thr:
@@ -487,7 +645,7 @@ def ffd_pack_packed(problem: Problem, pp: PackedProblem, bins: list[Bin],
                 best = cached_choice
             else:
                 best = _choose_open(problem, pp, g, rest_blocks(ri, k),
-                                    int(run_items[k]))
+                                    run_items[k])
                 cached_choice = best if head >= thr else None
             if nb == cap_rows:
                 grow()
@@ -498,15 +656,21 @@ def ffd_pack_packed(problem: Problem, pp: PackedProblem, bins: list[Bin],
             r = reqs_c[best]
             # the scalar path seeds the new bin with the item's own vector
             bused[b] = r
-            bins.append(Bin(choice=best, items=[int(run_items[k])]))
+            bins.append(Bin(choice=best, items=[run_items[k]]))
             bin_used.append([0.0] * D)        # synced below
             k += 1
-            ub, cb = bused[b], bcap[b]
+            rt = r.tolist()
+            ubt = bused[b].tolist()
+            cbt = (bcap[b] + EPS).tolist()
             blist = bins[b].items
-            while k < n and (ub + r <= cb + EPS).all():
-                blist.append(int(run_items[k]))
-                ub += r
+            while k < n:
+                nt = [u + x for u, x in zip(ubt, rt)]
+                if not all(v <= c for v, c in zip(nt, cbt)):
+                    break
+                blist.append(run_items[k])
+                ubt = nt
                 k += 1
+            bused[b] = ubt
         pos += n
 
     # sync the object view: pre-existing lists updated in place (the repair

@@ -64,7 +64,19 @@ class Problem:
         (d,) = dims or {0}
         # the packed builder shares one requirements tuple across all items
         # of a class — validating each distinct tuple once keeps construction
-        # O(classes x choices), not O(items x choices)
+        # O(classes x choices), not O(items x choices). A lazy item sequence
+        # (packed._PackedItemSeq) hands us the per-class tuples directly so
+        # no item object needs to exist at all.
+        distinct = getattr(self.items, "distinct_requirements", None)
+        if distinct is not None:
+            for g, reqs in enumerate(distinct()):
+                if len(reqs) != len(self.choices):
+                    raise ValueError(
+                        f"class {g}: requirements must align with choices")
+                for r in reqs:
+                    if r is not None and len(r) != d:
+                        raise ValueError(f"class {g}: bad vector length")
+            return
         seen: set[int] = set()
         for it in self.items:
             if id(it.requirements) in seen:
@@ -130,7 +142,15 @@ class Infeasible(Exception):
 
 
 def validate(problem: Problem, sol: Solution) -> None:
-    """Assert solution invariants: coverage, capacity, cost accounting."""
+    """Assert solution invariants: coverage, capacity, cost accounting.
+
+    Problems carrying packed arrays are checked with a handful of numpy
+    passes (identical invariants, same 1e-6 tolerances) — the per-item loop
+    below is O(N x D) Python work per replan, which at a million streams
+    would dwarf the packing itself."""
+    if getattr(problem, "packed", None) is not None:
+        _validate_packed(problem, sol)
+        return
     seen: set[int] = set()
     cost = 0.0
     for b in sol.bins:
@@ -149,6 +169,58 @@ def validate(problem: Problem, sol: Solution) -> None:
                 raise AssertionError(f"item {i} incompatible with {ch.key}")
     if seen != set(range(len(problem.items))):
         raise AssertionError(f"items not covered: {set(range(len(problem.items))) - seen}")
+    if abs(cost - sol.cost) > 1e-6:
+        raise AssertionError(f"cost mismatch: {cost} vs {sol.cost}")
+
+
+def _validate_packed(problem: Problem, sol: Solution) -> None:
+    """Vectorized :func:`validate` over the problem's packed arrays."""
+    import numpy as np
+
+    pp = problem.packed                       # attached by the packed builder
+    n_items = len(pp.item_class)
+    bins = sol.bins
+    nb = len(bins)
+    lengths = np.fromiter((len(b.items) for b in bins),
+                          dtype=np.int64, count=nb)
+    total = int(lengths.sum()) if nb else 0
+    flat = np.fromiter((i for b in bins for i in b.items),
+                       dtype=np.int64, count=total)
+    binc = np.fromiter((b.choice for b in bins), dtype=np.int64, count=nb)
+    item_bin = np.repeat(np.arange(nb, dtype=np.int64), lengths)
+
+    counts = np.bincount(flat, minlength=n_items) if total \
+        else np.zeros(n_items, dtype=np.int64)
+    if (counts > 1).any():
+        raise AssertionError(
+            f"item {int(np.argmax(counts > 1))} assigned twice")
+    if (counts == 0).any():
+        missing = set(np.flatnonzero(counts == 0).tolist())
+        raise AssertionError(f"items not covered: {missing}")
+
+    if total:
+        cls = pp.item_class[flat]
+        ch = binc[item_bin]
+        compat = pp.class_compat[cls, ch]
+        if not compat.all():
+            k = int(np.argmin(compat))
+            key = problem.choices[int(ch[k])].key
+            raise AssertionError(
+                f"item {int(flat[k])} incompatible with {key}")
+        reqv = pp.class_req[cls, ch]          # (total, D)
+        D = pp.ndim
+        used = np.empty((nb, D))
+        for d in range(D):
+            used[:, d] = np.bincount(item_bin, weights=reqv[:, d],
+                                     minlength=nb)
+        cap = pp.capacity[binc]
+        over = used > cap + 1e-6
+        if over.any():
+            b, d = np.unravel_index(int(np.argmax(over)), over.shape)
+            raise AssertionError(
+                f"bin {problem.choices[int(binc[b])].key} overfull in dim "
+                f"{int(d)}: {used[b, d]} > {cap[b, d]}")
+    cost = float(np.sum(pp.prices[binc])) if nb else 0.0
     if abs(cost - sol.cost) > 1e-6:
         raise AssertionError(f"cost mismatch: {cost} vs {sol.cost}")
 

@@ -88,12 +88,20 @@ def plan_assignment(plan: Plan) -> dict[str, tuple[str, int]]:
     """
     out: dict[str, tuple[str, int]] = {}
     ordinal: dict[str, int] = {}
+    # Packed problems carry item keys as a plain sequence; indexing it
+    # directly skips materializing an Item object per stream.
+    ids = getattr(plan.problem, "packed_ids", None)
     for b in plan.solution.bins:
         key = plan.problem.choices[b.choice].key
         n = ordinal.get(key, 0)
         ordinal[key] = n + 1
-        for i in b.items:
-            out[plan.problem.items[i].key] = (key, n)
+        if ids is not None:
+            placed = (key, n)
+            for i in b.items:
+                out[ids[i]] = placed
+        else:
+            for i in b.items:
+                out[plan.problem.items[i].key] = (key, n)
     return out
 
 

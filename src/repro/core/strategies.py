@@ -250,7 +250,9 @@ def ffd_greedy(streams: Sequence[Stream], catalog: Catalog) -> Plan:
     simulated hour and an exact solve per tick is unaffordable. Streams with
     cameras are RTT-filtered to their Fig.-4 feasible regions.
     """
-    rtt = any(s.camera is not None for s in streams)
+    has_cam = getattr(streams, "any_camera", None)
+    rtt = has_cam() if has_cam is not None \
+        else any(s.camera is not None for s in streams)
     problem = build_problem(streams, catalog, rtt_filter=rtt)
     sol = first_fit_decreasing(problem)
     validate(problem, sol)

@@ -70,7 +70,8 @@ class TelemetryHub:
     def emit(self, t: float, name: str, value: float, **attrs: str) -> MetricPoint:
         point = MetricPoint(t=t, name=name, value=float(value),
                             attrs=tuple(sorted((k, str(v))
-                                               for k, v in attrs.items())))
+                                               for k, v in attrs.items()))
+                            if attrs else ())
         self.points.append(point)
         self._latest[name] = point
         for fn in self._subscribers:

@@ -8,6 +8,16 @@ sun moves. Wrappers compose on top: Poisson camera churn (arrivals with
 exponential lifetimes), flash-crowd events (a region's rates spike for a
 window), and day/night program-mix shifts. Everything is a pure, seeded
 function of time — two scans of the same model are identical.
+
+Demand has two equivalent representations. ``streams_at`` returns the
+classic list of ``Stream`` objects (the API edge). ``columns_at`` returns a
+:class:`StreamColumns` — the same fleet as struct-of-arrays (ids, fps
+vector, program/camera codes) — which the columnar fleet simulator and the
+packed planner consume without materializing a Python object per stream.
+Every wrapper composes on columns: churn appends rows, flash crowds rescale
+the fps vector, mix shifts rewrite program codes. The two views are
+bit-identical (``float(cols.fps[i]) == streams[i].fps`` etc.; see
+tests/test_columnar_parity.py).
 """
 from __future__ import annotations
 
@@ -24,6 +34,93 @@ from repro.core.workload import PROGRAMS, Stream
 
 class DemandModel(Protocol):
     def streams_at(self, t_h: float) -> list[Stream]: ...
+
+
+class StreamColumns(Sequence):
+    """One tick's demanded fleet as struct-of-arrays.
+
+    ``ids`` is the per-stream id list (stable models reuse the same list
+    object every tick — downstream fast paths key on that identity);
+    ``fps`` the demanded rates in frames/s (float64, exactly the rounded
+    values ``streams_at`` would produce); programs and cameras are stored
+    factorized: ``program_codes[i]`` indexes ``programs_unique`` (and
+    ``camera_codes[i]`` indexes ``cameras_unique``, ``-1`` = no camera), so
+    class grouping in the packed planner is pure array work.
+
+    It is also a ``Sequence[Stream]``: indexing/iterating materializes the
+    object view lazily (once per tick, cached), so object-path consumers —
+    repair planning, EWMA forecasts — keep working unchanged.
+    """
+
+    __slots__ = ("ids", "fps", "program_codes", "programs_unique",
+                 "camera_codes", "cameras_unique", "_streams")
+
+    def __init__(self, ids, fps, program_codes, programs_unique,
+                 camera_codes, cameras_unique) -> None:
+        self.ids = ids
+        self.fps = fps
+        self.program_codes = program_codes
+        self.programs_unique = programs_unique
+        self.camera_codes = camera_codes
+        self.cameras_unique = cameras_unique
+        self._streams: Optional[list[Stream]] = None
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    def _materialize(self) -> list[Stream]:
+        if self._streams is None:
+            progs = self.programs_unique
+            cams = self.cameras_unique
+            fps = self.fps.tolist()
+            self._streams = [
+                Stream(sid, progs[p], fps=f,
+                       camera=(cams[c] if c >= 0 else None))
+                for sid, p, f, c in zip(self.ids, self.program_codes.tolist(),
+                                        fps, self.camera_codes.tolist())]
+        return self._streams
+
+    def __getitem__(self, i):
+        return self._materialize()[i]
+
+    def __iter__(self):
+        return iter(self._materialize())
+
+    def any_camera(self) -> bool:
+        return bool((self.camera_codes >= 0).any())
+
+
+def _factorize_by_id(objs) -> tuple[np.ndarray, tuple]:
+    """Codes for a list of objects, grouped by identity."""
+    code_of: dict[int, int] = {}
+    unique: list = []
+    codes = np.empty(len(objs), dtype=np.int64)
+    for n, o in enumerate(objs):
+        c = code_of.get(id(o))
+        if c is None:
+            c = len(unique)
+            code_of[id(o)] = c
+            unique.append(o)
+        codes[n] = c
+    return codes, tuple(unique)
+
+
+def _factorize_cameras(cams) -> tuple[np.ndarray, tuple]:
+    """Codes for a list of camera ids (``None`` maps to code ``-1``)."""
+    code_of: dict[str, int] = {}
+    unique: list[str] = []
+    codes = np.empty(len(cams), dtype=np.int64)
+    for n, c in enumerate(cams):
+        if c is None:
+            codes[n] = -1
+            continue
+        k = code_of.get(c)
+        if k is None:
+            k = len(unique)
+            code_of[c] = k
+            unique.append(c)
+        codes[n] = k
+    return codes, tuple(unique)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +145,14 @@ def rush_hour_fps(local_h: float, base: float, peak: float,
     return base + (peak - base) * min(1.0, bump)
 
 
+def _rush_hour_fps_array(local_h: np.ndarray, base, peak,
+                         width_h: float) -> np.ndarray:
+    """Batched :func:`rush_hour_fps` — identical floats, one numpy pass."""
+    bump = (np.exp(-((local_h - 8.5) / width_h) ** 2)
+            + np.exp(-((local_h - 17.5) / width_h) ** 2))
+    return base + (peak - base) * np.minimum(1.0, bump)
+
+
 @dataclasses.dataclass(frozen=True)
 class DiurnalFleet:
     """Each camera follows the rush-hour curve in its own local time.
@@ -65,17 +170,23 @@ class DiurnalFleet:
 
     def _arrays(self):
         """Cached per-camera columns: (utc offsets h, base fps, peak fps,
-        program objects, stream ids, camera ids)."""
+        program objects, stream ids, camera ids, program codes/unique,
+        camera codes/unique)."""
         cached = getattr(self, "_cols", None)
         if cached is None:
+            programs = [PROGRAMS[c.program] for c in self.cameras]
+            cams = [c.camera for c in self.cameras]
+            pcodes, puniq = _factorize_by_id(programs)
+            ccodes, cuniq = _factorize_cameras(cams)
             cached = (
                 np.array([geo.utc_offset_hours(c.camera)
                           for c in self.cameras]),
                 np.array([c.base_fps for c in self.cameras]),
                 np.array([c.peak_fps for c in self.cameras]),
-                [PROGRAMS[c.program] for c in self.cameras],
+                programs,
                 [c.stream_id for c in self.cameras],
-                [c.camera for c in self.cameras],
+                cams,
+                pcodes, puniq, ccodes, cuniq,
             )
             object.__setattr__(self, "_cols", cached)
         return cached
@@ -83,15 +194,23 @@ class DiurnalFleet:
     def fps_at(self, t_h: float) -> np.ndarray:
         """All cameras' demanded frame rates (frames/s) at UTC hour ``t_h``
         as one vector — the batched form of :func:`rush_hour_fps`."""
-        offs, base, peak, _, _, _ = self._arrays()
+        offs, base, peak = self._arrays()[:3]
         local_h = np.mod(t_h + offs, 24.0)
-        bump = (np.exp(-((local_h - 8.5) / self.width_h) ** 2)
-                + np.exp(-((local_h - 17.5) / self.width_h) ** 2))
-        return base + (peak - base) * np.minimum(1.0, bump)
+        return _rush_hour_fps_array(local_h, base, peak, self.width_h)
+
+    def columns_at(self, t_h: float) -> StreamColumns:
+        """The fleet at ``t_h`` as :class:`StreamColumns` (the id list and
+        code arrays are the cached per-fleet objects, reused every tick)."""
+        (_, _, _, _, ids, _, pcodes, puniq, ccodes, cuniq) = self._arrays()
+        # np.round is verified bit-identical to the scalar round(., 3) on
+        # this curve family (tests/test_packed_parity.py covers it end to
+        # end)
+        fps = np.round(self.fps_at(t_h), 3)
+        return StreamColumns(ids, fps, pcodes, puniq, ccodes, cuniq)
 
     def streams_at(self, t_h: float) -> list[Stream]:
         from repro.core import packed
-        if not packed.enabled():
+        if not packed.enabled() and self.cameras:
             out = []
             for c in self.cameras:
                 fps = rush_hour_fps(geo.local_hour(t_h, c.camera),
@@ -99,17 +218,15 @@ class DiurnalFleet:
                 out.append(Stream(c.stream_id, PROGRAMS[c.program],
                                   fps=round(fps, 3), camera=c.camera))
             return out
-        _, _, _, programs, ids, cams = self._arrays()
-        # np.round is verified bit-identical to the scalar round(., 3) on
-        # this curve family (tests/test_packed_parity.py covers it end to
-        # end); tolist() converts to Python floats in one pass
+        (_, _, _, programs, ids, cams) = self._arrays()[:6]
+        # tolist() converts to Python floats in one pass
         fps = np.round(self.fps_at(t_h), 3).tolist()
         # reuse the frozen Stream while a camera's rounded rate is unchanged
         # (diurnal curves plateau at base and peak) — identical objects, no
         # per-tick reallocation for the stable part of the fleet
         cache = getattr(self, "_stream_cache", None)
         if cache is None:
-            cache = [None] * len(self.cameras)
+            cache = [None] * len(ids)
             object.__setattr__(self, "_stream_cache", cache)
         out = []
         for n, (sid, prog, fr, cam) in enumerate(zip(ids, programs, fps, cams)):
@@ -121,12 +238,43 @@ class DiurnalFleet:
         return out
 
 
+def columnar_fleet(ids: list, utc_offset_h: np.ndarray, base_fps: np.ndarray,
+                   peak_fps: np.ndarray, program_codes: np.ndarray,
+                   programs_unique: tuple, camera_codes: np.ndarray,
+                   cameras_unique: tuple, width_h: float = 1.5) -> DiurnalFleet:
+    """Build a :class:`DiurnalFleet` directly from columns — no per-camera
+    :class:`CameraSpec` objects. At continent scale (10^6 streams) the object
+    constructor would allocate a million specs just to factorize them back
+    into the arrays below; this hands the fleet its cached columns up front.
+    ``programs_unique`` holds :class:`~repro.core.workload.Program` objects,
+    ``cameras_unique`` camera ids (keys of ``geo.CAMERAS``); the code arrays
+    index them per stream (camera code ``-1`` = no camera). The resulting
+    model is bit-identical to the equivalent ``DiurnalFleet(specs)``."""
+    pcodes = np.asarray(program_codes, dtype=np.int64)
+    ccodes = np.asarray(camera_codes, dtype=np.int64)
+    puniq = tuple(programs_unique)
+    cuniq = tuple(cameras_unique)
+    programs = [puniq[c] for c in pcodes.tolist()]
+    cams = [cuniq[c] if c >= 0 else None for c in ccodes.tolist()]
+    fleet = DiurnalFleet(cameras=(), width_h=width_h)
+    object.__setattr__(fleet, "_cols", (
+        np.asarray(utc_offset_h, dtype=np.float64),
+        np.asarray(base_fps, dtype=np.float64),
+        np.asarray(peak_fps, dtype=np.float64),
+        programs, list(ids), cams, pcodes, puniq, ccodes, cuniq))
+    return fleet
+
+
 @dataclasses.dataclass(frozen=True)
 class PoissonChurn:
     """Cameras come and go: Poisson arrivals (``rate_per_h`` per simulated
     hour) over the horizon, each living an exponential lifetime of mean
     ``mean_lifetime_h`` hours, cycling through a pool of camera templates.
-    The whole arrival schedule is drawn once at construction from the seed."""
+    The whole arrival schedule is drawn once at construction from the seed.
+
+    Churn streams ride the *same* diurnal curve as the fleet they join:
+    ``width_h`` is taken from the wrapped model's rush-hour width (or set
+    explicitly), not silently reset to the default."""
 
     inner: DemandModel
     templates: tuple[CameraSpec, ...]
@@ -134,6 +282,9 @@ class PoissonChurn:
     mean_lifetime_h: float = 6.0
     horizon_h: float = 24.0
     seed: int = 0
+    # None = inherit the innermost wrapped model's width_h (1.5 if none
+    # declares one); a float pins it explicitly
+    width_h: Optional[float] = None
     _schedule: tuple[tuple[float, float, CameraSpec], ...] = ()
 
     def __post_init__(self) -> None:
@@ -148,15 +299,103 @@ class PoissonChurn:
             sched.append((float(a), float(a + life), spec))
         object.__setattr__(self, "_schedule", tuple(sched))
 
+    def effective_width_h(self) -> float:
+        """The rush-hour width churn streams use: ``width_h`` if set, else
+        the first ``width_h`` found walking down the wrapped model chain."""
+        if self.width_h is not None:
+            return self.width_h
+        m = self.inner
+        while m is not None:
+            w = getattr(m, "width_h", None)
+            if w is not None:
+                return w
+            m = getattr(m, "inner", None)
+        return 1.5
+
+    def _churn_arrays(self):
+        """Cached per-schedule columns for the batched path."""
+        cached = getattr(self, "_carr", None)
+        if cached is None:
+            sched = self._schedule
+            programs = [PROGRAMS[c.program] for _, _, c in sched]
+            cached = (
+                np.array([s for s, _, _ in sched]),
+                np.array([e for _, e, _ in sched]),
+                np.array([geo.utc_offset_hours(c.camera)
+                          for _, _, c in sched]),
+                np.array([c.base_fps for _, _, c in sched]),
+                np.array([c.peak_fps for _, _, c in sched]),
+                programs,
+                [c.stream_id for _, _, c in sched],
+                [c.camera for _, _, c in sched],
+            )
+            object.__setattr__(self, "_carr", cached)
+        return cached
+
+    def _active_fps(self, t_h: float):
+        """(active schedule indices, their rounded fps) at ``t_h``."""
+        starts, ends, offs, base, peak = self._churn_arrays()[:5]
+        if starts.size == 0:
+            return np.empty(0, dtype=np.int64), np.empty(0)
+        active = np.flatnonzero((starts <= t_h) & (t_h < ends))
+        if active.size == 0:
+            return active, np.empty(0)
+        local = np.mod(t_h + offs[active], 24.0)
+        fps = _rush_hour_fps_array(local, base[active], peak[active],
+                                   self.effective_width_h())
+        return active, np.round(fps, 3)
+
     def streams_at(self, t_h: float) -> list[Stream]:
+        from repro.core import packed
         out = self.inner.streams_at(t_h)
-        for start, end, c in self._schedule:
-            if start <= t_h < end:
-                fps = rush_hour_fps(geo.local_hour(t_h, c.camera),
-                                    c.base_fps, c.peak_fps)
-                out.append(Stream(c.stream_id, PROGRAMS[c.program],
-                                  fps=round(fps, 3), camera=c.camera))
+        if not packed.enabled():
+            width = self.effective_width_h()
+            for start, end, c in self._schedule:
+                if start <= t_h < end:
+                    fps = rush_hour_fps(geo.local_hour(t_h, c.camera),
+                                        c.base_fps, c.peak_fps, width)
+                    out.append(Stream(c.stream_id, PROGRAMS[c.program],
+                                      fps=round(fps, 3), camera=c.camera))
+            return out
+        active, fps = self._active_fps(t_h)
+        if active.size:
+            _, _, _, _, _, programs, ids, cams = self._churn_arrays()
+            for k, f in zip(active.tolist(), fps.tolist()):
+                out.append(Stream(ids[k], programs[k], fps=f, camera=cams[k]))
         return out
+
+    def columns_at(self, t_h: float) -> StreamColumns:
+        cols = self.inner.columns_at(t_h)
+        active, fps = self._active_fps(t_h)
+        if not active.size:
+            return cols
+        _, _, _, _, _, programs, ids, cams = self._churn_arrays()
+        puniq = list(cols.programs_unique)
+        pcode_of = {id(p): n for n, p in enumerate(puniq)}
+        cuniq = list(cols.cameras_unique)
+        ccode_of = {c: n for n, c in enumerate(cuniq)}
+        pcodes = np.empty(active.size, dtype=np.int64)
+        ccodes = np.empty(active.size, dtype=np.int64)
+        for n, k in enumerate(active.tolist()):
+            p = programs[k]
+            pc = pcode_of.get(id(p))
+            if pc is None:
+                pc = len(puniq)
+                pcode_of[id(p)] = pc
+                puniq.append(p)
+            pcodes[n] = pc
+            cam = cams[k]
+            cc = ccode_of.get(cam)
+            if cc is None:
+                cc = len(cuniq)
+                ccode_of[cam] = cc
+                cuniq.append(cam)
+            ccodes[n] = cc
+        return StreamColumns(
+            cols.ids + [ids[k] for k in active.tolist()],
+            np.concatenate([cols.fps, fps]),
+            np.concatenate([cols.program_codes, pcodes]), tuple(puniq),
+            np.concatenate([cols.camera_codes, ccodes]), tuple(cuniq))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,6 +427,26 @@ class FlashCrowd:
             boosted.append(s)
         return boosted
 
+    def columns_at(self, t_h: float) -> StreamColumns:
+        cols = self.inner.columns_at(t_h)
+        if not (self.start_h <= t_h < self.start_h + self.duration_h):
+            return cols
+        caps = np.array([min(self.cap_fps, p.max_gpu_fps())
+                         for p in cols.programs_unique])
+        cap = caps[cols.program_codes]
+        if self.cameras is None:
+            mask = np.ones(len(cols), dtype=bool)
+        else:
+            sel = np.array([c in self.cameras for c in cols.cameras_unique],
+                           dtype=bool)
+            mask = (cols.camera_codes >= 0) \
+                & sel[np.maximum(cols.camera_codes, 0)]
+        f = np.minimum(cols.fps * self.multiplier, cap)
+        fps = np.where(mask, np.floor(f * 1000) / 1000, cols.fps)
+        return StreamColumns(cols.ids, fps,
+                             cols.program_codes, cols.programs_unique,
+                             cols.camera_codes, cols.cameras_unique)
+
 
 @dataclasses.dataclass(frozen=True)
 class MixShift:
@@ -214,6 +473,17 @@ class MixShift:
             memo[stream_id] = sel
         return sel
 
+    def _selected_mask(self, ids) -> np.ndarray:
+        """Per-stream selection as a bool vector, cached per id-list object
+        (stable fleets reuse their id list every tick)."""
+        cached = getattr(self, "_selmask", None)
+        if cached is not None and cached[0] is ids:
+            return cached[1]
+        mask = np.fromiter((self._selected(sid) for sid in ids),
+                           dtype=bool, count=len(ids))
+        object.__setattr__(self, "_selmask", (ids, mask))
+        return mask
+
     def streams_at(self, t_h: float) -> list[Stream]:
         # the night test depends only on the camera, not the stream — decide
         # once per distinct camera per tick instead of per stream
@@ -231,6 +501,32 @@ class MixShift:
                     s = dataclasses.replace(s, program=prog)
             out.append(s)
         return out
+
+    def columns_at(self, t_h: float) -> StreamColumns:
+        cols = self.inner.columns_at(t_h)
+        if not len(cols):
+            return cols
+        offs = np.array([geo.utc_offset_hours(c)
+                         for c in cols.cameras_unique]) \
+            if cols.cameras_unique else np.empty(0)
+        local = np.mod(t_h + offs, 24.0)
+        night_uniq = (local >= self.night_start_h) | (local < self.night_end_h)
+        night = (cols.camera_codes >= 0) \
+            & night_uniq[np.maximum(cols.camera_codes, 0)] \
+            if offs.size else np.zeros(len(cols), dtype=bool)
+        shift = night & self._selected_mask(cols.ids)
+        if not shift.any():
+            return cols
+        prog = PROGRAMS[self.night_program]
+        puniq = cols.programs_unique
+        try:
+            code = next(n for n, p in enumerate(puniq) if p is prog)
+        except StopIteration:
+            code = len(puniq)
+            puniq = puniq + (prog,)
+        pcodes = np.where(shift, code, cols.program_codes)
+        return StreamColumns(cols.ids, cols.fps, pcodes, puniq,
+                             cols.camera_codes, cols.cameras_unique)
 
 
 def peak_streams(demand: DemandModel, horizon_h: float,

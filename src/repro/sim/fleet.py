@@ -1,29 +1,48 @@
 """The fleet simulator: demand → policy → cluster → ledger, in event order.
 
 One :class:`FleetSimulator` run replays a demand model against an
-autoscaling policy over simulated days. The event queue interleaves
-control-loop ticks with spot preemptions; every demanded frame ends the run
-either analyzed or dropped (never silently lost), and every instance-hour is
-billed — so policies are comparable on exactly the two axes the paper cares
-about: dollars and service.
+autoscaling policy over simulated days. The control loop interleaves
+ticks with spot preemptions; every demanded frame ends the run either
+analyzed or dropped (never silently lost), and every instance-hour is
+billed — so policies are comparable on exactly the two axes the paper
+cares about: dollars and service.
 
 Per tick ``t`` (all times in simulated hours):
 
-1. account the interval that just ended, using the demand and stream→instance
-   assignment that were in force (preemptions that fired mid-interval have
-   already truncated their instances' service windows);
-2. read the demand model, tell the policy whether a preemption hit since its
-   last decision (``decide(..., preempted=True)`` forces adaptive replans,
-   replaying orphaned streams), and reconcile the cluster to the new plan —
-   missing instances boot with a delay, surplus ones terminate;
-3. advance the spot market's price walk and schedule the preemptions it
+1. apply the preemptions that fired inside the interval that just ended
+   (one vectorized batch in event order — equivalent to the historical
+   one-heap-pop-per-event loop, and bit-identical in its ledgers);
+2. account the interval, using the demand and stream→instance assignment
+   that were in force, then retire long-terminated instances from the
+   cluster's columns (their hours seal into an aggregate; billing is
+   unchanged);
+3. read the demand model, tell the policy whether a preemption hit since
+   its last decision (``decide(..., preempted=True)`` forces adaptive
+   replans, replaying orphaned streams), and reconcile the cluster to the
+   new plan — missing instances boot with a delay, surplus ones drain;
+4. advance the spot market's price walk and schedule the preemptions it
    draws for the coming interval.
+
+The loop runs in one of two modes with bit-identical ledgers:
+
+* **object** — per-tick ``Stream`` lists and ``{stream_id: instance_id}``
+  dicts, the historical path; always used when a ground-truth service or
+  calibration caps frames (those are keyed per stream id).
+* **columnar** — demand stays a :class:`~repro.sim.demand.StreamColumns`
+  struct-of-arrays, placement is a per-stream instance-row array, and
+  accounting is a handful of numpy passes. Chosen automatically when the
+  demand model exposes ``columns_at`` and packed mode is on; this is the
+  path that takes a 24 h × 1M-stream day from hours to minutes
+  (benchmarks/columnar_sweep.py).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
+import numpy as np
+
+from repro.core import packed as packed_mod
 from repro.core.catalog import Catalog
 from repro.sim import events as ev
 from repro.sim.cluster import ONDEMAND, SPOT, Cluster, SpotMarket
@@ -57,16 +76,21 @@ class FleetSimulator:
     spent, frames demanded/analyzed/dropped (frames = frames/s x seconds),
     migrations and preemptions — the two axes (dollars, service) every
     policy is compared on.
+
+    ``columnar`` pins the loop mode: True/False force it, None (default)
+    picks columnar when the demand model supports it (see module doc).
     """
 
     def __init__(self, demand: DemandModel, policy, catalog: Catalog,
                  config: SimConfig = SimConfig(),
                  calibration: Optional[ServiceCalibration] = None,
-                 service=None, telemetry=None) -> None:
+                 service=None, telemetry=None,
+                 columnar: Optional[bool] = None) -> None:
         self.demand = demand
         self.policy = policy
         self.config = config
         self.calibration = calibration
+        self.columnar = columnar
         # ``service`` is the *ground truth* serving capacity
         # (obs.DriftingService): when set, it caps analyzed frames instead of
         # the policy's believed calibration — the truth-vs-belief split that
@@ -92,13 +116,99 @@ class FleetSimulator:
         if attach is not None:
             attach(self.market, config.dt_h, config.boot_delay_h)
 
-    def run(self) -> Ledger:
+    def _tick_times(self) -> list[float]:
+        """Decision boundaries ``k * dt`` strictly inside the horizon.
+
+        Generated by accumulation, not ``round(duration / dt)``: a
+        non-divisible horizon (2.5 h at dt=1.0) keeps its genuine final
+        interval — demand is re-read at the last whole tick and the tail
+        [2.0, 2.5) is accounted at END — instead of banker's-rounding the
+        tail away."""
         cfg = self.config
-        q = ev.EventQueue()
-        n_ticks = int(round(cfg.duration_h / cfg.dt_h))
-        for k in range(n_ticks):
-            q.push(k * cfg.dt_h, ev.TICK)
-        q.push(cfg.duration_h, ev.END)
+        out: list[float] = []
+        k = 0
+        while True:
+            t = k * cfg.dt_h
+            if t >= cfg.duration_h - 1e-9:
+                break
+            out.append(t)
+            k += 1
+        return out
+
+    def run(self) -> Ledger:
+        use_columnar = self.columnar
+        if use_columnar is None:
+            use_columnar = (packed_mod.enabled()
+                            and hasattr(self.demand, "columns_at")
+                            and self.service is None
+                            and self.calibration is None)
+        if use_columnar:
+            return self._run_columnar()
+        return self._run_object()
+
+    # -- shared event-batch plumbing ----------------------------------------
+    #
+    # Preemption/outbid events land mid-interval. The historical loop kept
+    # them in a heap and popped one at a time; here each boundary drains its
+    # batch in (time, push-order) — the exact heap pop order — through
+    # Cluster.terminate_batch. An event timed exactly *at* a boundary is
+    # applied at the next one, which is precisely when the old heap popped
+    # it (ticks were pushed first, so at equal times the tick went first).
+
+    @staticmethod
+    def _due(pending: list, t: float) -> tuple[list, list]:
+        due = sorted(e for e in pending if e[0] < t)
+        if due:
+            pending = [e for e in pending if not (e[0] < t)]
+        return due, pending
+
+    def _apply_batch(self, due: list) -> tuple[int, int]:
+        """Apply one boundary's event batch; return (#applied, #outbids)."""
+        applied = self.cluster.terminate_batch(
+            (when, iid, kind) for (when, _seq, kind, iid) in due)
+        outbids = sum(1 for kind in applied if kind == ev.OUTBID)
+        return len(applied), outbids
+
+    def _schedule_market(self, t: float, pending: list, seq: int) -> int:
+        """Advance the price walk; push the coming interval's reclaims."""
+        cfg = self.config
+        self.market.step(cfg.dt_h)
+        if cfg.spot_fraction > 0:
+            for when, iid in self.market.draw_preemptions(
+                    t, cfg.dt_h, self.cluster.live_spot()):
+                pending.append((when, seq, ev.PREEMPT, iid))
+                seq += 1
+        # deterministic bid-based reclaims: the walk just set the price
+        # for [t, t + dt); every bid now underwater is reclaimed when
+        # the price path crosses it mid-interval. Consumes no RNG, so
+        # legacy hazard draws and the walk stay policy-independent.
+        for iid in self.market.outbid(self.cluster.live_spot()):
+            pending.append((t + 0.5 * cfg.dt_h, seq, ev.OUTBID, iid))
+            seq += 1
+        return seq
+
+    def _policy_interval_stats(self, adaptive, events_seen: int
+                               ) -> tuple[int, int, int, float]:
+        """(events_seen', defrags, recals, calib_err) after a decide()."""
+        defrags = recals = 0
+        if adaptive is not None:
+            new_events = adaptive.events[events_seen:]
+            events_seen = len(adaptive.events)
+            defrags = sum(1 for e in new_events
+                          if getattr(e, "defrag", False))
+            recals = sum(1 for e in new_events
+                         if getattr(e, "recalibration", False))
+        # drift-aware policies publish the verdict of the probe they
+        # just took; the ledger gets the calibration error column
+        verdict = getattr(self.policy, "last_drift", None)
+        calib_err = verdict.rel_error if verdict is not None else 0.0
+        return events_seen, defrags, recals, calib_err
+
+    # -- object-path loop ---------------------------------------------------
+
+    def _run_object(self) -> Ledger:
+        cfg = self.config
+        ticks = self._tick_times()
 
         current_streams = []                 # demand in force this interval
         assignment: dict[str, str] = {}      # stream_id -> instance_id
@@ -111,30 +221,21 @@ class FleetSimulator:
         defrags_this_interval = 0
         calib_err_this_interval = 0.0
         recals_this_interval = 0
+        outbids_this_interval = 0
         # adaptive policies expose their decision trace; the ledger records
         # when the repair planner's defrag escape hatch fired
         adaptive = getattr(self.policy, "adaptive", None)
         events_seen = 0
+        pending: list = []                   # (when, seq, kind, instance_id)
+        seq = 0
 
-        outbids_this_interval = 0
-
-        while q:
-            e = q.pop()
-            if e.kind in (ev.PREEMPT, ev.OUTBID):
-                inst = self.cluster.instances.get(e.payload)
-                if inst is not None and (inst.terminated_t is None
-                                         or inst.terminated_t > e.time):
-                    self.cluster.terminate(inst.instance_id, e.time,
-                                           preempted=True)
-                    preempted_since_decide += 1
-                    preemptions_this_interval += 1
-                    if e.kind == ev.OUTBID:
-                        outbids_this_interval += 1
-                continue
-            if e.kind not in (ev.TICK, ev.END):
-                continue
-
-            t = e.time
+        for t in ticks + [cfg.duration_h]:
+            due, pending = self._due(pending, t)
+            if due:
+                n_applied, n_outbids = self._apply_batch(due)
+                preempted_since_decide += n_applied
+                preemptions_this_interval += n_applied
+                outbids_this_interval += n_outbids
             if t > prev_t:
                 self._account(prev_t, t, current_streams, assignment,
                               prev_assignment, prev_fps,
@@ -146,8 +247,12 @@ class FleetSimulator:
                               recals_this_interval)
                 preemptions_this_interval = 0
                 outbids_this_interval = 0
+                # rows terminated before the interval just billed can never
+                # be billed, matched, or credited again — seal them off so
+                # per-tick work tracks the live fleet, not every boot ever
+                self.cluster.retire(prev_t)
                 prev_t = t
-            if e.kind == ev.END:
+            if t >= cfg.duration_h - 1e-9:
                 break
 
             prev_assignment = assignment
@@ -156,22 +261,9 @@ class FleetSimulator:
             plan = self.policy.decide(t, current_streams,
                                       preempted=preempted_since_decide > 0)
             preempted_since_decide = 0
-            if adaptive is not None:
-                new_events = adaptive.events[events_seen:]
-                events_seen = len(adaptive.events)
-                defrags_this_interval = sum(
-                    1 for e in new_events if getattr(e, "defrag", False))
-                recals_this_interval = sum(
-                    1 for e in new_events
-                    if getattr(e, "recalibration", False))
-            else:
-                defrags_this_interval = 0
-                recals_this_interval = 0
-            # drift-aware policies publish the verdict of the probe they
-            # just took; the ledger gets the calibration error column
-            verdict = getattr(self.policy, "last_drift", None)
-            calib_err_this_interval = (verdict.rel_error
-                                       if verdict is not None else 0.0)
+            (events_seen, defrags_this_interval, recals_this_interval,
+             calib_err_this_interval) = self._policy_interval_stats(
+                adaptive, events_seen)
             assignment = self.cluster.reconcile(
                 t, plan, drain_h=cfg.boot_delay_h,
                 bids=getattr(self.policy, "bids", None))
@@ -185,18 +277,120 @@ class FleetSimulator:
                 1 for sid, iid in assignment.items()
                 if sid in prev_assignment and prev_assignment[sid] != iid)
 
-            self.market.step(cfg.dt_h)
-            if cfg.spot_fraction > 0:
-                for when, iid in self.market.draw_preemptions(
-                        t, cfg.dt_h, self.cluster.live_spot()):
-                    q.push(when, ev.PREEMPT, iid)
-            # deterministic bid-based reclaims: the walk just set the price
-            # for [t, t + dt); every bid now underwater is reclaimed when
-            # the price path crosses it mid-interval. Consumes no RNG, so
-            # legacy hazard draws and the walk stay policy-independent.
-            for iid in self.market.outbid(self.cluster.live_spot()):
-                q.push(t + 0.5 * cfg.dt_h, ev.OUTBID, iid)
+            seq = self._schedule_market(t, pending, seq)
         return self.ledger
+
+    # -- columnar loop ------------------------------------------------------
+
+    def _run_columnar(self) -> Ledger:
+        cfg = self.config
+        ticks = self._tick_times()
+        cluster = self.cluster
+
+        cur = None                            # StreamColumns in force
+        cur_rows: Optional[np.ndarray] = None  # per-stream instance row
+        pprev_ids = None                      # the decision before that
+        pprev_rows: Optional[np.ndarray] = None
+        pprev_fps: Optional[np.ndarray] = None
+        prev_t = 0.0
+        preempted_since_decide = 0
+        preemptions_this_interval = 0
+        migrations_this_interval = 0
+        defrags_this_interval = 0
+        calib_err_this_interval = 0.0
+        recals_this_interval = 0
+        outbids_this_interval = 0
+        adaptive = getattr(self.policy, "adaptive", None)
+        events_seen = 0
+        pending: list = []
+        seq = 0
+
+        for t in ticks + [cfg.duration_h]:
+            due, pending = self._due(pending, t)
+            if due:
+                n_applied, n_outbids = self._apply_batch(due)
+                preempted_since_decide += n_applied
+                preemptions_this_interval += n_applied
+                outbids_this_interval += n_outbids
+            if t > prev_t:
+                self._account_cols(prev_t, t, cur, cur_rows,
+                                   pprev_ids, pprev_rows, pprev_fps,
+                                   preemptions_this_interval,
+                                   migrations_this_interval,
+                                   defrags_this_interval,
+                                   outbids_this_interval,
+                                   calib_err_this_interval,
+                                   recals_this_interval)
+                preemptions_this_interval = 0
+                outbids_this_interval = 0
+                # retire remaps cluster._prev_cols (our cur_rows array) in
+                # place; pprev_rows is a different array, remapped here —
+                # though rows it can reference are never old enough to drop
+                remap = cluster.retire(prev_t)
+                if remap is not None and pprev_rows is not None \
+                        and pprev_rows is not cur_rows:
+                    pprev_rows[:] = np.where(
+                        pprev_rows >= 0,
+                        remap[np.maximum(pprev_rows, 0)], -1)
+                prev_t = t
+            if t >= cfg.duration_h - 1e-9:
+                break
+
+            pprev_ids = cur.ids if cur is not None else None
+            pprev_rows = cur_rows
+            pprev_fps = cur.fps if cur is not None else None
+            cur = self.demand.columns_at(t)
+            plan = self.policy.decide(t, cur,
+                                      preempted=preempted_since_decide > 0)
+            preempted_since_decide = 0
+            (events_seen, defrags_this_interval, recals_this_interval,
+             calib_err_this_interval) = self._policy_interval_stats(
+                adaptive, events_seen)
+            cur_rows = cluster.reconcile_rows(
+                t, plan, cur.ids, drain_h=cfg.boot_delay_h,
+                bids=getattr(self.policy, "bids", None))
+            prow = self._aligned_prev_rows(cur.ids, pprev_ids, pprev_rows)
+            if prow is None:
+                migrations_this_interval = 0
+            else:
+                migrations_this_interval = int(np.count_nonzero(
+                    (cur_rows >= 0) & (prow >= 0) & (cur_rows != prow)))
+
+            seq = self._schedule_market(t, pending, seq)
+        return self.ledger
+
+    def _aligned_prev_rows(self, ids, pids, prows) -> Optional[np.ndarray]:
+        """Previous-decision instance rows re-aligned to stream id list
+        ``ids`` (-1 = stream had no previous placement). Identity of the
+        id list is the fast path — stable fleets reuse one list forever."""
+        if prows is None or pids is None:
+            return None
+        if pids is ids:
+            return prows
+        index = {sid: k for k, sid in enumerate(pids)}
+        out = np.full(len(ids), -1, dtype=np.int64)
+        pl = prows.tolist()
+        for k, sid in enumerate(ids):
+            j = index.get(sid)
+            if j is not None:
+                out[k] = pl[j]
+        return out
+
+    def _aligned_prev_fps(self, ids, pids, pfps) -> Optional[np.ndarray]:
+        if pfps is None or pids is None:
+            return None
+        if pids is ids:
+            return pfps
+        index = {sid: k for k, sid in enumerate(pids)}
+        out = np.zeros(len(ids))
+        pl = pfps.tolist()
+        for k, sid in enumerate(ids):
+            j = index.get(sid)
+            if j is not None:
+                out[k] = pl[j]
+        return out
+
+    # -- accounting ---------------------------------------------------------
 
     def _account(self, t0: float, t1: float, streams, assignment,
                  prev_assignment, prev_fps, preemptions: int,
@@ -237,13 +431,66 @@ class FleetSimulator:
             elif self.calibration is not None:
                 a = min(a, self.calibration.frame_rate_cap(s.stream_id) * dt_s)
             analyzed += a
+        self._close_tick(t0, t1, len(streams), demanded, analyzed,
+                         preemptions, migrations, defrags, outbids,
+                         calib_err, recals)
+
+    def _account_cols(self, t0: float, t1: float, cols, rows,
+                      pids, prows, pfps, preemptions: int, migrations: int,
+                      defrags: int, outbids: int, calib_err: float,
+                      recals: int) -> None:
+        """Columnar twin of :meth:`_account`: the same per-stream float
+        expressions as array ops, summed in stream order (cumsum) so the
+        totals are bit-identical to the scalar loop."""
+        if cols is None or len(cols) == 0:
+            self._close_tick(t0, t1, 0, 0.0, 0.0, preemptions, migrations,
+                             defrags, outbids, calib_err, recals)
+            return
+        dt_s = (t1 - t0) * 3600.0
+        c = self.cluster
+        fps = cols.fps
+        d = fps * dt_s
+        has = rows >= 0
+        r = np.maximum(rows, 0)
+        ready = c._ready[r]
+        term = c._term[r]
+        span = t1 - t0
+        frac = np.maximum(0.0, np.minimum(t1, term)
+                          - np.maximum(t0, ready)) / span
+        a = d * np.where(has, frac, 0.0)
+
+        prow = self._aligned_prev_rows(cols.ids, pids, prows)
+        if prow is not None:
+            busy = np.zeros(c._n, dtype=bool)
+            busy[rows[has]] = True
+            pr = np.maximum(prow, 0)
+            credit_mask = (prow >= 0) & (prow != rows) & ~busy[pr]
+            if credit_mask.any():
+                pready = c._ready[pr]
+                pterm = c._term[pr]
+                pfrac = np.maximum(0.0, np.minimum(t1, pterm)
+                                   - np.maximum(t0, pready)) / span
+                old_rate = np.minimum(
+                    fps, self._aligned_prev_fps(cols.ids, pids, pfps))
+                a = np.where(credit_mask,
+                             np.maximum(a, old_rate * dt_s * pfrac), a)
+        a = np.minimum(a, d)
+        demanded = float(np.cumsum(d)[-1])
+        analyzed = float(np.cumsum(a)[-1])
+        self._close_tick(t0, t1, len(cols), demanded, analyzed, preemptions,
+                         migrations, defrags, outbids, calib_err, recals)
+
+    def _close_tick(self, t0: float, t1: float, n_streams: int,
+                    demanded: float, analyzed: float, preemptions: int,
+                    migrations: int, defrags: int, outbids: int,
+                    calib_err: float, recals: int) -> None:
         cost, hours, by_market = self.cluster.accrue(t0, t1, self.market)
-        live = len(self.cluster.live())
+        live = self.cluster.live_count()
         self.ledger.add_tick(TickRecord(
             t=t0, cost=cost, frames_demanded=demanded,
             frames_analyzed=analyzed, frames_dropped=demanded - analyzed,
             migrations=migrations, preemptions=preemptions,
-            instances_live=live, streams=len(streams),
+            instances_live=live, streams=n_streams,
             defrags=defrags,
             cost_ondemand=by_market.get(ONDEMAND, 0.0),
             cost_spot=by_market.get(SPOT, 0.0),

@@ -34,11 +34,14 @@ import dataclasses
 import itertools
 from typing import Callable, Optional, Sequence
 
+import numpy as np
+
 from repro.core import geo
 from repro.core.catalog import Catalog, fig6_catalog
+from repro.core.workload import PROGRAMS
 from repro.sim.demand import (CameraSpec, DemandModel, DiurnalFleet,
                               FlashCrowd, MixShift, PoissonChurn,
-                              peak_streams)
+                              columnar_fleet, peak_streams)
 from repro.sim.fleet import SimConfig
 
 US_CAMERAS = ("nyc", "chicago", "la", "seattle")
@@ -319,6 +322,45 @@ def mega_city(n_streams: int = 10_000, duration_h: float = 24.0,
                     "4x EU evening flash crowd (vectorized-path stress test)")
 
 
+def continent_scale(n_streams: int = 1_000_000, duration_h: float = 24.0,
+                    seed: int = 0) -> Scenario:
+    """Million-stream day: the columnar-path scale gate.
+
+    The same fleet shape as ``_fleet(ALL_CAMERAS, n)`` — cameras round-robin
+    over the 12 cities, every 4th stream runs VGG16 at low rates, the rest
+    ZF with a modest swing — but built straight from numpy columns via
+    :func:`~repro.sim.demand.columnar_fleet`, so constructing the scenario
+    never allocates a ``CameraSpec`` (or ``Stream``) per camera. Demand is
+    pure diurnal (no churn/flash wrappers) and fully on-demand
+    (``spot_fraction=0``), so the stable-id fast paths carry every tick:
+    ``benchmarks/columnar_sweep.py`` gates the 24 h x 1M wall-clock and the
+    columnar-vs-object ledger parity at smaller sizes of the same shape."""
+    cams = ALL_CAMERAS
+    nc = len(cams)
+    idx = np.arange(n_streams, dtype=np.int64)
+    cam_codes = idx % nc
+    vgg = (idx % 4) == 3
+    ids = [(f"vgg-{cams[i % nc]}-{i}" if i % 4 == 3
+            else f"zf-{cams[i % nc]}-{i}") for i in range(n_streams)]
+    demand = columnar_fleet(
+        ids,
+        utc_offset_h=np.array([geo.utc_offset_hours(c)
+                               for c in cams])[cam_codes],
+        base_fps=np.where(vgg, 0.1, 0.2),
+        peak_fps=np.where(vgg, 1.5, 2.5),
+        program_codes=vgg.astype(np.int64),
+        programs_unique=(PROGRAMS["ZF"], PROGRAMS["VGG16"]),
+        camera_codes=cam_codes,
+        cameras_unique=cams)
+    return Scenario(
+        name="continent_scale",
+        demand=demand,
+        config=SimConfig(duration_h=duration_h, dt_h=1.0, seed=seed,
+                         spot_fraction=0.0),
+        description="1M streams, 12 cities, pure diurnal on-demand day: "
+                    "the columnar fleet-state scale gate")
+
+
 SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "steady": steady,
     "rush_hour": rush_hour,
@@ -330,4 +372,5 @@ SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "regional_drift": regional_drift,
     "mega_city": mega_city,
     "spot_bidder": spot_bidder,
+    "continent_scale": continent_scale,
 }
