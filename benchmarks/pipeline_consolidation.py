@@ -1,0 +1,229 @@
+"""Benchmark (BEYOND-PAPER): content-aware pipeline demand — cross-camera
+crop consolidation vs per-camera stage packing.
+
+Arms on ``consolidated_city`` (24h x 120 pipeline cameras over four US
+cities, fixed seed, identical density curves):
+
+* consolidation **off** — every camera's crop-classify stage is its own
+  demand item; the planner pays one model load (GPU memory base + host
+  feed cores) per camera;
+* consolidation **on** — each city's crop stages pool onto shared GPU
+  workers (``pool::roi_vehicle.classify@nyc#k``), chunk counts pinned at
+  peak density so the pooled ids are stable all day.
+
+Both arms replay the identical seeded day under ``ReactivePolicy``; the
+only difference is the demand-side view of the same analysis work.
+
+Acceptance (asserted here and in CI via ``--smoke``): consolidation-on is
+>= 15% cheaper than consolidation-off at an equal-or-better SLO; frames
+are conserved in both arms; packed-vs-scalar ledger parity holds on the
+pipeline scenarios at 100 and 1000 streams (bit-identical signatures); and
+the whole suite finishes in under 60 s. The 100-stream parity point runs
+the full 24 h day; the 1000-stream point runs a 1 h slice — the scalar
+baseline's opening rule rescans every remaining item per opened bin, so a
+full scalar day at 1000 streams costs minutes by design (it is the thing
+the packed path exists to beat). ``--out`` writes the summary JSON
+(uploaded as a CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# runnable as `python benchmarks/pipeline_consolidation.py` from the repo root
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core import packed as packed_mod
+from repro.core.manager import ResourceManager
+from repro.sim import FleetSimulator, ReactivePolicy
+from repro.sim.scenarios import consolidated_city, roi_day
+
+N_STREAMS = 120
+DURATION_H = 24.0
+SEED = 0
+
+# acceptance bars (ISSUE 9): the consolidation saving and the SLO floor,
+# plus parity points (streams, hours) and a wall-clock budget
+MIN_REDUCTION = 0.15
+PARITY_POINTS = ((100, 24.0), (1000, 1.0))
+TIME_BUDGET_S = 60.0
+
+
+def _conserved(ledger) -> bool:
+    return all(abs(r.frames_demanded - r.frames_analyzed - r.frames_dropped)
+               < 1e-6 * max(1.0, r.frames_demanded) for r in ledger.records)
+
+
+def _run_arm(consolidate: bool) -> dict:
+    sc = consolidated_city(n_streams=N_STREAMS, duration_h=DURATION_H,
+                           seed=SEED, consolidate=consolidate)
+    cat = sc.catalog()
+    t0 = time.perf_counter()
+    led = FleetSimulator(sc.demand, ReactivePolicy(ResourceManager(cat)),
+                         cat, sc.config).run()
+    return {"totals": led.totals(),
+            "slo": led.slo_attainment(),
+            "frames_conserved": _conserved(led),
+            "elapsed_s": round(time.perf_counter() - t0, 2)}
+
+
+def compare_arms() -> dict:
+    on, off = _run_arm(True), _run_arm(False)
+    return {"consolidate_on": on, "consolidate_off": off,
+            "cost_reduction": round(
+                1.0 - on["totals"]["total_cost"]
+                / off["totals"]["total_cost"], 4),
+            "slo_delta": round(off["slo"] - on["slo"], 6)}
+
+
+def parity_check() -> list[dict]:
+    """Packed vs scalar ledger parity for pipeline demand: run ``roi_day``
+    both ways and compare full per-tick ledger signatures (exact floats).
+    Stage emission, activation math, and pooling are mode-independent by
+    construction; this gate keeps them that way."""
+    out = []
+    for n, hours in PARITY_POINTS:
+        sc = roi_day(n_streams=n, duration_h=hours, seed=SEED)
+        cat = sc.catalog()
+        t0 = time.perf_counter()
+        led_p = FleetSimulator(sc.demand,
+                               ReactivePolicy(ResourceManager(cat)),
+                               cat, sc.config).run()
+        with packed_mod.scalar_mode():
+            led_s = FleetSimulator(sc.demand,
+                                   ReactivePolicy(ResourceManager(cat)),
+                                   cat, sc.config).run()
+        out.append({
+            "n_streams": n,
+            "duration_h": hours,
+            "ledger_parity": led_p.signature() == led_s.signature(),
+            "total_cost": led_p.totals()["total_cost"],
+            "elapsed_s": round(time.perf_counter() - t0, 2),
+        })
+    return out
+
+
+def check_acceptance(arms: dict, parity: list[dict],
+                     total_elapsed: float) -> list[str]:
+    """Returns a list of violated acceptance bars (empty = pass)."""
+    bad = []
+    if arms["cost_reduction"] < MIN_REDUCTION:
+        bad.append(f"consolidation saving {arms['cost_reduction']:.1%} "
+                   f"< {MIN_REDUCTION:.0%} vs unconsolidated")
+    if arms["slo_delta"] > 0:
+        bad.append(f"consolidated SLO {arms['consolidate_on']['slo']:.6f} "
+                   f"worse than unconsolidated "
+                   f"{arms['consolidate_off']['slo']:.6f}")
+    for name in ("consolidate_on", "consolidate_off"):
+        if not arms[name]["frames_conserved"]:
+            bad.append(f"{name}: ledger frame conservation violated")
+    if arms["consolidate_on"]["totals"]["pooled_items_peak"] <= 0:
+        bad.append("consolidate_on arm never emitted a pooled chunk")
+    for p in parity:
+        if not p["ledger_parity"]:
+            bad.append(f"packed vs scalar ledger mismatch at "
+                       f"{p['n_streams']} streams")
+    if total_elapsed > TIME_BUDGET_S:
+        bad.append(f"suite took {total_elapsed:.1f}s > {TIME_BUDGET_S:.0f}s")
+    return bad
+
+
+def run() -> list[dict]:
+    """Harness entry (benchmarks/run.py): CSV rows with acceptance flags."""
+    t0 = time.perf_counter()
+    arms = compare_arms()
+    parity = parity_check()
+    violations = check_acceptance(arms, parity, time.perf_counter() - t0)
+    on, off = arms["consolidate_on"], arms["consolidate_off"]
+    rows = [
+        {"name": "pipeline_consolidation_off",
+         "us_per_call": off["elapsed_s"] * 1e6,
+         "derived": f"${off['totals']['total_cost']:.2f}/24h "
+                    f"SLO {off['slo']:.4f} "
+                    f"stage items {off['totals']['stage_items_peak']}"},
+        {"name": "pipeline_consolidation_on",
+         "us_per_call": on["elapsed_s"] * 1e6,
+         "derived": (f"{arms['cost_reduction']:.1%} cheaper "
+                     f"SLO delta {-arms['slo_delta']:+.4f} "
+                     f"pooled chunks {on['totals']['pooled_items_peak']}"),
+         "match_paper": (arms["cost_reduction"] >= MIN_REDUCTION
+                         and arms["slo_delta"] <= 0
+                         and on["frames_conserved"]
+                         and off["frames_conserved"])},
+    ]
+    for p in parity:
+        rows.append({
+            "name": f"pipeline_parity_{p['n_streams']}",
+            "us_per_call": p["elapsed_s"] * 1e6,
+            "derived": ("ledger bit-identical packed vs scalar"
+                        if p["ledger_parity"] else "PARITY BROKEN"),
+            "match_paper": p["ledger_parity"],
+        })
+    rows.append({
+        "name": "pipeline_consolidation_acceptance",
+        "us_per_call": (time.perf_counter() - t0) * 1e6,
+        "derived": "all bars met" if not violations else "; ".join(violations),
+        "match_paper": not violations,
+    })
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the acceptance comparison and exit non-zero "
+                         "on any violated bar (CI gate)")
+    ap.add_argument("--out", default=None,
+                    help="write the summary JSON here")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    arms = compare_arms()
+    parity = parity_check()
+    total_elapsed = time.perf_counter() - t0
+    violations = check_acceptance(arms, parity, total_elapsed)
+
+    on, off = arms["consolidate_on"], arms["consolidate_off"]
+    print(f"consolidation off  ${off['totals']['total_cost']:.2f}/24h "
+          f"SLO {off['slo']:.4f}  "
+          f"stage items {off['totals']['stage_items_peak']}  "
+          f"[{off['elapsed_s']}s]")
+    print(f"consolidation on   ${on['totals']['total_cost']:.2f}/24h "
+          f"({arms['cost_reduction']:.1%} cheaper)  "
+          f"SLO {on['slo']:.4f}  "
+          f"pooled chunks {on['totals']['pooled_items_peak']}  "
+          f"[{on['elapsed_s']}s]")
+    for p in parity:
+        print(f"parity {p['n_streams']:5d} streams: "
+              f"{'bit-identical' if p['ledger_parity'] else 'BROKEN'} "
+              f"[{p['elapsed_s']}s]")
+
+    summary = {"arms": arms, "parity": parity, "violations": violations,
+               "elapsed_s": round(total_elapsed, 2),
+               "bars": {"min_cost_reduction": MIN_REDUCTION,
+                        "max_slo_delta": 0.0,
+                        "time_budget_s": TIME_BUDGET_S}}
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)) or ".",
+                    exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+        print(f"summary written to {args.out}")
+
+    if violations:
+        print("ACCEPTANCE " + ("FAILED" if args.smoke else "bars violated")
+              + ":\n  " + "\n  ".join(violations))
+        return 1 if args.smoke else 0
+    print(f"acceptance ok in {total_elapsed:.1f}s "
+          f"(budget {TIME_BUDGET_S:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -46,6 +46,8 @@ _SUITES: list[tuple[str, str, str]] = [
      "event loop (beyond-paper)", "columnar_sweep"),
     ("obs_export", "observability exporters + per-group recalibration "
      "(beyond-paper)", "obs_export"),
+    ("pipeline_consolidation", "content-aware pipelines: crop consolidation "
+     "vs per-camera stages (beyond-paper)", "pipeline_consolidation"),
     ("kernels", "pallas kernels (interpret-mode validation)",
      "kernel_sweep"),
 ]

@@ -3,6 +3,7 @@
 Public API:
     Catalog / InstanceType / fig3_catalog / fig6_catalog / table1_catalog
     Stream / AnalysisProgram / VGG16 / ZF / FIG3_SCENARIOS / make_streams
+    AnalysisPipeline / PipelineStage / PIPELINES / scaled_program
     ResourceManager / AdaptiveManager / Plan
     strategies: ST1/ST2/ST3 (CPU-GPU), NL/ARMVAC/GCL (location-aware)
     solver: exact branch-and-bound MDMC vector-bin-packing
@@ -21,17 +22,21 @@ from repro.core.repair import (RepairConfig, RepairResult,
                                count_plan_migrations, plan_assignment,
                                repair_plan)
 from repro.core.strategies import Plan, STRATEGIES, build_problem
-from repro.core.workload import (FIG3_SCENARIOS, PROGRAMS, VGG16, ZF,
-                                 AnalysisProgram, Stream, make_streams)
+from repro.core.workload import (FIG3_SCENARIOS, PIPELINES, PROGRAMS, VGG16,
+                                 ZF, AnalysisPipeline, AnalysisProgram,
+                                 PipelineStage, Stream, make_streams,
+                                 scaled_program)
 
 __all__ = [
-    "AdaptiveManager", "AnalysisProgram", "Bin", "Catalog", "Choice",
+    "AdaptiveManager", "AnalysisPipeline", "AnalysisProgram", "Bin",
+    "Catalog", "Choice",
     "FIG3_SCENARIOS", "Infeasible", "InstanceType", "Item", "MarketQuote",
-    "MixedConfig", "MixedResult", "PROGRAMS",
-    "Plan", "Problem", "RepairConfig", "RepairResult", "ResourceManager",
+    "MixedConfig", "MixedResult", "PIPELINES", "PROGRAMS",
+    "Plan", "PipelineStage", "Problem", "RepairConfig", "RepairResult",
+    "ResourceManager",
     "STRATEGIES", "Solution", "Stream", "UTILIZATION_CAP", "VGG16", "ZF",
     "build_problem", "count_plan_migrations", "fig3_catalog", "fig6_catalog",
     "make_streams", "mixed_plan", "plan_assignment", "quotes", "repair_plan",
-    "replica_group", "spot_affinity_violations", "spot_problem",
-    "table1_catalog", "validate",
+    "replica_group", "scaled_program", "spot_affinity_violations",
+    "spot_problem", "table1_catalog", "validate",
 ]

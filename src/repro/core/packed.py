@@ -42,7 +42,8 @@ import numpy as np
 
 from repro.core import geo
 from repro.core.packing import EPS, Bin, Infeasible, Item, Problem
-from repro.core.workload import Stream, requirement_columns
+from repro.core.workload import (Stream, class_requirement_columns,
+                                 requirement_columns)
 
 # ---------------------------------------------------------------------------
 # Global switch: the scalar (pre-refactor) path stays available for parity
@@ -233,9 +234,9 @@ def _build_items_from_columns(streams, choices, metas, target_fps,
 
     group_per_choice: list[list] = []
     for g2 in gfirst.tolist():
-        rep = Stream(stream_id="_class", program=puniq[int(cls_p[g2])],
-                     fps=float(cls_f[g2]))
-        by_type = requirement_columns(rep, types, target_fps)
+        by_type = class_requirement_columns(puniq[int(cls_p[g2])],
+                                            float(cls_f[g2]),
+                                            types, target_fps)
         group_per_choice.append(
             [by_type[type_ids[id(t)]] for (t, _loc) in metas])
 
@@ -449,21 +450,53 @@ def _open_efficiency(pp: PackedProblem, blocks) -> np.ndarray:
     identical copy is too, so the closed-form count equals the per-item
     scan. ``blocks`` is a sequence of ``(group_id, n_compat)`` with
     ``n_compat`` a per-choice count vector. Returns price / items-held per
-    choice (``inf`` where nothing fits)."""
+    choice (``inf`` where nothing fits).
+
+    Group-aliveness screen: a block of group ``g2`` changes the fill state
+    only if some choice still fits one whole copy of ``g2``
+    (``floor(resid/req) >= 1`` on every binding dim). Base-dominated items
+    (e.g. pipeline crop stages whose binding dim is an fps-independent
+    model-load base) tie in norm size across many (program, fps) groups, so
+    the sorted order interleaves them into hundreds of tiny blocks — but
+    every choice saturates within the first few, after which each later
+    block of a dead group provably contributes ``k = 0``. Those blocks are
+    skipped without touching state (aliveness is recomputed with the same
+    floor-division arithmetic whenever the state changes, so the skip is
+    exact), and the scan stops once no group is alive. Counts — and hence
+    efficiencies and the opening argmin — are bit-identical to the full
+    scan."""
     C, D = pp.capacity.shape
     used = np.zeros((C, D))
     count = np.zeros(C)
-    for g2, n_compat in blocks:
-        req = pp.group_req[g2]                      # (C, D)
-        resid = pp.capacity + EPS - used
-        with np.errstate(divide="ignore", invalid="ignore"):
-            kd = np.floor(resid / req)
-        kd = np.where(req > 0, kd, np.inf)          # only positive dims bind
-        k = np.minimum(kd.min(axis=1), n_compat)
-        k = np.maximum(k, 0.0)
-        if k.any():
-            used += k[:, None] * np.where(np.isfinite(req), req, 0.0)
-            count += k
+    cap_eps = pp.capacity + EPS
+    guniq = sorted({g2 for g2, _ in blocks})
+    gpos = {g2: i for i, g2 in enumerate(guniq)}
+    greq = pp.group_req[guniq]                      # (Gu, C, D)
+    gfin = np.where(np.isfinite(greq), greq, 0.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        def _alive() -> np.ndarray:
+            kd = np.floor((cap_eps - used)[None, :, :] / greq)
+            kd = np.where(greq > 0, kd, np.inf)
+            return (kd.min(axis=2) >= 1.0).any(axis=1)     # (Gu,)
+
+        alive = _alive()
+        any_alive = bool(alive.any())
+        for g2, n_compat in blocks:
+            if not any_alive:
+                break
+            gi = gpos[g2]
+            if not alive[gi]:
+                continue
+            req = greq[gi]                          # (C, D)
+            kd = np.floor((cap_eps - used) / req)
+            kd = np.where(req > 0, kd, np.inf)      # only positive dims bind
+            k = np.minimum(kd.min(axis=1), n_compat)
+            k = np.maximum(k, 0.0)
+            if k.any():
+                used += k[:, None] * gfin[gi]
+                count += k
+                alive = _alive()
+                any_alive = bool(alive.any())
     with np.errstate(divide="ignore"):
         eff = np.where(count > 0, pp.prices / np.maximum(count, 1.0), np.inf)
     return eff

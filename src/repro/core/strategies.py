@@ -259,6 +259,23 @@ def ffd_greedy(streams: Sequence[Stream], catalog: Catalog) -> Plan:
     return Plan(sol, problem, "FFD")
 
 
+def consolidated_ffd(streams: Sequence[Stream], catalog: Catalog,
+                     pooled: Optional[Sequence[Stream]] = None) -> Plan:
+    """Keep-the-cheaper stage consolidation (the mixed-market pattern from
+    ``core.markets``): FFD-pack the per-camera stage items and, when a
+    ``pooled`` view of the same demand is given (crop stages merged onto
+    shared workers — e.g. the ``consolidate=True`` arm of
+    ``sim.demand.PipelineFleet``), also pack that; return whichever plan is
+    cheaper. Consolidating is therefore never worse than not consolidating,
+    by construction — the property tests rely on this, the simulator gates
+    the actual saving empirically."""
+    base = ffd_greedy(streams, catalog)
+    if pooled is None:
+        return base
+    alt = ffd_greedy(pooled, catalog)
+    return alt if alt.hourly_cost <= base.hourly_cost else base
+
+
 def repair_incremental(streams: Sequence[Stream], catalog: Catalog,
                        previous=None, config=None) -> Plan:
     """REPAIR (BEYOND-PAPER): min-migration incremental replanning. Keeps

@@ -14,7 +14,8 @@ from repro.sim.bidding import (FixedMarginBid, LookaheadBid, PercentileBid,
                                SpotBidPolicy)
 from repro.sim.cluster import Cluster, SimInstance, SpotMarket
 from repro.sim.demand import (CameraSpec, DiurnalFleet, FlashCrowd, MixShift,
-                              PoissonChurn, peak_streams, rush_hour_fps)
+                              PipelineCameraSpec, PipelineFleet, PoissonChurn,
+                              peak_streams, rush_hour_fps)
 from repro.sim.events import Event, EventQueue
 from repro.sim.fleet import FleetSimulator, SimConfig
 from repro.sim.ledger import Ledger, ServiceCalibration, TickRecord
@@ -23,7 +24,8 @@ from repro.sim.scenarios import SCENARIOS, Scenario
 __all__ = [
     "CameraSpec", "Cluster", "DiurnalFleet", "Event", "EventQueue",
     "FixedMarginBid", "FlashCrowd", "FleetSimulator", "Ledger",
-    "LookaheadBid", "MixShift", "PercentileBid", "PoissonChurn",
+    "LookaheadBid", "MixShift", "PercentileBid", "PipelineCameraSpec",
+    "PipelineFleet", "PoissonChurn",
     "PredictiveEWMAPolicy", "ReactivePolicy", "RepairPolicy", "SCENARIOS",
     "Scenario", "ScheduledPolicy", "ServiceCalibration", "SimConfig",
     "SimInstance", "SpotBidPolicy", "SpotMarket", "StaticPeakPolicy",

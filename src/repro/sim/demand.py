@@ -29,7 +29,7 @@ from typing import Optional, Protocol, Sequence
 import numpy as np
 
 from repro.core import geo
-from repro.core.workload import PROGRAMS, Stream
+from repro.core.workload import PIPELINES, PROGRAMS, Stream
 
 
 class DemandModel(Protocol):
@@ -263,6 +263,235 @@ def columnar_fleet(ids: list, utc_offset_h: np.ndarray, base_fps: np.ndarray,
         np.asarray(peak_fps, dtype=np.float64),
         programs, list(ids), cams, pcodes, puniq, ccodes, cuniq))
     return fleet
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineCameraSpec:
+    """One camera running an analysis *pipeline* at a fixed capture rate.
+
+    Unlike :class:`CameraSpec` (whose frame rate swings diurnally), the
+    camera grabs ``fps`` frames/s around the clock — what swings is the
+    scene's *content density* between ``base_density`` (sparse night) and
+    ``peak_density`` (dense rush hour), which modulates how often each
+    downstream pipeline stage activates. A busy scene IS the demand spike."""
+
+    stream_id: str
+    camera: str                  # key in geo.CAMERAS
+    pipeline: str                # key in workload.PIPELINES
+    fps: float                   # capture rate, frames/s (constant)
+    base_density: float = 0.05   # scene density off-peak, in [0, 1]
+    peak_density: float = 1.0    # scene density at the rush-hour crest
+
+
+class _PipelineArrays:
+    """Static per-fleet columns for :class:`PipelineFleet` (built once)."""
+
+    __slots__ = ("offs", "dbase", "dpeak",
+                 "pair_spec", "pair_share", "pair_floor", "pair_gain",
+                 "pair_fps", "base_idx", "pooled_idx",
+                 "base_ids", "base_pcodes", "base_ccodes",
+                 "pool_code", "n_pools", "pool_chunks", "pool_prefixes",
+                 "all_pcodes", "all_ccodes", "puniq", "cuniq", "ids")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineFleet:
+    """Content-aware pipeline demand: cameras emit *stages*, not streams.
+
+    Every camera runs its pipeline's stages; each stage becomes one demand
+    item ``"{stream_id}::{stage}"`` at the activation-weighted stage rate —
+    so the planner packs stages (cheap full-frame detectors separately from
+    heavy crop models) and the fleet's effective demand follows the scene
+    density curve, not a frame-rate knob.
+
+    ``consolidate=True`` additionally pools each camera-colocated group of
+    ``consolidatable`` stage crops (same camera, pipeline, stage) into
+    shared workers: the pooled rate is split across the fewest chunks that
+    respect the stage's ``cap_fps()`` *at peak density* — the chunk count is
+    static, so pooled ids (``"pool::{pipeline}.{stage}@{camera}#{k}"``) are
+    stable all day and only the per-chunk rate breathes with the scene; one
+    model load serves many cameras' crops, and no chunk ever appears
+    mid-run just because the scene got busy. The ``#k`` suffix reuses the
+    replica anti-affinity grammar from ``core.markets``: chunks of one pool
+    never co-locate on a single spot market.
+
+    Like :class:`DiurnalFleet`, evaluation is batched (one numpy pass per
+    tick over the flattened (camera, stage) pairs) with a bit-identical
+    scalar fallback under ``repro.core.packed.scalar_mode()``.
+    """
+
+    cameras: tuple[PipelineCameraSpec, ...]
+    width_h: float = 1.5
+    consolidate: bool = False
+
+    # sim.fleet keys its stage/pooled ledger columns off this marker
+    emits_stages = True
+
+    def _arrays(self) -> _PipelineArrays:
+        cached = getattr(self, "_cols", None)
+        if cached is not None:
+            return cached
+        a = _PipelineArrays()
+        a.offs = np.array([geo.utc_offset_hours(c.camera)
+                           for c in self.cameras])
+        a.dbase = np.array([c.base_density for c in self.cameras])
+        a.dpeak = np.array([c.peak_density for c in self.cameras])
+        # flatten to (camera, stage) pairs, spec-major in stage order
+        pair_spec, share, floor, gain, fps = [], [], [], [], []
+        pair_ids, pair_progs, pair_cams, pooled = [], [], [], []
+        pair_stage, pair_pipe = [], []
+        for n, spec in enumerate(self.cameras):
+            pipe = PIPELINES[spec.pipeline]
+            for st in pipe.stages:
+                pair_spec.append(n)
+                share.append(st.rate_share)
+                floor.append(st.activation_floor)
+                gain.append(st.activation_gain)
+                fps.append(spec.fps)
+                pair_ids.append(f"{spec.stream_id}::{st.name}")
+                pair_progs.append(st.resolved_program())
+                pair_cams.append(spec.camera)
+                pair_stage.append(st)
+                pair_pipe.append(pipe.name)
+                pooled.append(self.consolidate and st.consolidatable)
+        a.pair_spec = np.array(pair_spec, dtype=np.int64)
+        a.pair_share = np.array(share)
+        a.pair_floor = np.array(floor)
+        a.pair_gain = np.array(gain)
+        a.pair_fps = np.array(fps)
+        pooled = np.array(pooled, dtype=bool)
+        a.base_idx = np.flatnonzero(~pooled)
+        a.pooled_idx = np.flatnonzero(pooled)
+        a.base_ids = [pair_ids[i] for i in a.base_idx.tolist()]
+        # pools factorize by (camera, pipeline, stage) in first appearance
+        # order over the pooled pairs — the scalar path's dict order
+        pool_of: dict[tuple, int] = {}
+        pool_code, caps, prefixes, pool_progs, pool_cams = [], [], [], [], []
+        peak_tot: list[float] = []
+        for i in a.pooled_idx.tolist():
+            st, pname, cam = pair_stage[i], pair_pipe[i], pair_cams[i]
+            spec = self.cameras[pair_spec[i]]
+            key = (cam, pname, st.name)
+            k = pool_of.get(key)
+            if k is None:
+                k = len(pool_of)
+                pool_of[key] = k
+                caps.append(st.cap_fps())
+                prefixes.append(f"pool::{pname}.{st.name}@{cam}")
+                pool_progs.append(st.resolved_program())
+                pool_cams.append(cam)
+                peak_tot.append(0.0)
+            pool_code.append(k)
+            # the member's rate at the densest the scene ever gets — the
+            # diurnal curve is bounded by [min, max](base, peak) density
+            dmax = max(spec.base_density, spec.peak_density)
+            act = min(1.0, max(0.0, st.activation_floor
+                               + st.activation_gain * dmax))
+            peak_tot[k] += round(spec.fps * (st.rate_share * act), 3)
+        a.pool_code = np.array(pool_code, dtype=np.int64)
+        a.n_pools = len(pool_of)
+        # chunk counts are pinned at peak: per-chunk rate stays under
+        # cap_fps() all day and the pooled id list never changes mid-run
+        a.pool_chunks = np.array(
+            [max(1, math.ceil(t / c)) for t, c in zip(peak_tot, caps)],
+            dtype=np.int64)
+        a.pool_prefixes = prefixes
+        # one factorization covers base pairs and pools (emission order:
+        # base items first, then pool chunks)
+        base_progs = [pair_progs[i] for i in a.base_idx.tolist()]
+        base_cams = [pair_cams[i] for i in a.base_idx.tolist()]
+        pcodes, a.puniq = _factorize_by_id(base_progs + pool_progs)
+        ccodes, a.cuniq = _factorize_cameras(base_cams + pool_cams)
+        nb = len(base_progs)
+        if a.n_pools:
+            mm = a.pool_chunks
+            a.all_pcodes = np.concatenate([pcodes[:nb],
+                                           np.repeat(pcodes[nb:], mm)])
+            a.all_ccodes = np.concatenate([ccodes[:nb],
+                                           np.repeat(ccodes[nb:], mm)])
+        else:
+            a.all_pcodes, a.all_ccodes = pcodes, ccodes
+        a.ids = a.base_ids + [f"{pref}#{k}"
+                              for pref, m in zip(a.pool_prefixes,
+                                                 a.pool_chunks.tolist())
+                              for k in range(m)]
+        object.__setattr__(self, "_cols", a)
+        return a
+
+    def density_at(self, t_h: float) -> np.ndarray:
+        """Every camera's scene density at UTC hour ``t_h`` — the rush-hour
+        curve of :func:`rush_hour_fps` reinterpreted as content density."""
+        a = self._arrays()
+        local = np.mod(t_h + a.offs, 24.0)
+        return _rush_hour_fps_array(local, a.dbase, a.dpeak, self.width_h)
+
+    def _pair_rates(self, t_h: float) -> np.ndarray:
+        """Per-(camera, stage) demanded frames/s at ``t_h`` (milli-fps)."""
+        a = self._arrays()
+        dens = self.density_at(t_h)
+        act = np.minimum(1.0, np.maximum(
+            0.0, a.pair_floor + a.pair_gain * dens[a.pair_spec]))
+        # same op order as the scalar path: fps * (share * activation)
+        return np.round(a.pair_fps * (a.pair_share * act), 3)
+
+    def columns_at(self, t_h: float) -> StreamColumns:
+        a = self._arrays()
+        rate = self._pair_rates(t_h)
+        if a.n_pools == 0:
+            return StreamColumns(a.ids, rate, a.all_pcodes, a.puniq,
+                                 a.all_ccodes, a.cuniq)
+        # np.bincount accumulates weights in input order — the same order
+        # (spec-major, stage order) the scalar dict accumulation uses
+        totals = np.bincount(a.pool_code, weights=rate[a.pooled_idx],
+                             minlength=a.n_pools)
+        # truncate (never round up) so cap_fps stays a hard per-chunk ceiling
+        chunk = np.floor((totals / a.pool_chunks) * 1000.0) / 1000.0
+        fps = np.concatenate([rate[a.base_idx],
+                              np.repeat(chunk, a.pool_chunks)])
+        return StreamColumns(a.ids, fps, a.all_pcodes, a.puniq,
+                             a.all_ccodes, a.cuniq)
+
+    def streams_at(self, t_h: float) -> list[Stream]:
+        from repro.core import packed
+        if packed.enabled() or not self.cameras:
+            return list(self.columns_at(t_h))
+        out: list[Stream] = []
+        pool_totals: dict[tuple, float] = {}
+        pool_meta: dict[tuple, tuple] = {}
+        for spec in self.cameras:
+            pipe = PIPELINES[spec.pipeline]
+            dens = rush_hour_fps(geo.local_hour(t_h, spec.camera),
+                                 spec.base_density, spec.peak_density,
+                                 self.width_h)
+            for st in pipe.stages:
+                act = min(1.0, max(0.0, st.activation_floor
+                                   + st.activation_gain * dens))
+                f = round(spec.fps * (st.rate_share * act), 3)
+                if self.consolidate and st.consolidatable:
+                    key = (spec.camera, pipe.name, st.name)
+                    meta = pool_meta.get(key)
+                    if meta is None:
+                        meta = pool_meta[key] = [st.cap_fps(),
+                                                 st.resolved_program(), 0.0]
+                        pool_totals[key] = 0.0
+                    pool_totals[key] += f
+                    # member's rate at peak density — fixes the chunk count
+                    dmax = max(spec.base_density, spec.peak_density)
+                    act_pk = min(1.0, max(0.0, st.activation_floor
+                                          + st.activation_gain * dmax))
+                    meta[2] += round(spec.fps * (st.rate_share * act_pk), 3)
+                else:
+                    out.append(Stream(f"{spec.stream_id}::{st.name}",
+                                      st.resolved_program(), fps=f,
+                                      camera=spec.camera))
+        for (cam, pname, sname), total in pool_totals.items():
+            cap, prog, peak = pool_meta[(cam, pname, sname)]
+            m = max(1, math.ceil(peak / cap))
+            f = math.floor((total / m) * 1000.0) / 1000.0
+            for k in range(m):
+                out.append(Stream(f"pool::{pname}.{sname}@{cam}#{k}",
+                                  prog, fps=f, camera=cam))
+        return out
 
 
 @dataclasses.dataclass(frozen=True)

@@ -109,6 +109,10 @@ class FleetSimulator:
                                  hazard_per_h=config.preempt_hazard_per_h,
                                  seed=config.seed + 2)
         self.ledger = Ledger()
+        # pipeline demand models (sim.demand.PipelineFleet) emit per-stage
+        # items; the ledger then carries stage/pooled-chunk columns
+        self._emits_stages = bool(getattr(demand, "emits_stages", False))
+        self._pipe_counts: Optional[tuple] = None   # id-list-keyed cache
         # bidding policies observe the market (prices are exogenous: the
         # walk never depends on what any policy rents or bids) and the
         # control-loop timing their preemption-penalty models price against
@@ -392,6 +396,24 @@ class FleetSimulator:
 
     # -- accounting ---------------------------------------------------------
 
+    def _pipeline_counts(self, ids) -> tuple[int, int]:
+        """(stage items, pooled chunks) among the demanded ids, following
+        the id grammar of ``sim.demand.PipelineFleet`` (``sid::stage`` /
+        ``pool::...#k``). Cached per id-list object — the columnar path
+        reuses one list while the pool split is stable."""
+        cached = self._pipe_counts
+        if cached is not None and cached[0] is ids:
+            return cached[1]
+        stage = pooled = 0
+        for sid in ids:
+            if "::" in sid:
+                stage += 1
+                if sid.startswith("pool::"):
+                    pooled += 1
+        val = (stage, pooled)
+        self._pipe_counts = (ids, val)
+        return val
+
     def _account(self, t0: float, t1: float, streams, assignment,
                  prev_assignment, prev_fps, preemptions: int,
                  migrations: int, defrags: int = 0,
@@ -431,9 +453,13 @@ class FleetSimulator:
             elif self.calibration is not None:
                 a = min(a, self.calibration.frame_rate_cap(s.stream_id) * dt_s)
             analyzed += a
+        stage_n = pooled_n = 0
+        if self._emits_stages:
+            stage_n, pooled_n = self._pipeline_counts(
+                [s.stream_id for s in streams])
         self._close_tick(t0, t1, len(streams), demanded, analyzed,
                          preemptions, migrations, defrags, outbids,
-                         calib_err, recals)
+                         calib_err, recals, stage_n, pooled_n)
 
     def _account_cols(self, t0: float, t1: float, cols, rows,
                       pids, prows, pfps, preemptions: int, migrations: int,
@@ -477,13 +503,18 @@ class FleetSimulator:
         a = np.minimum(a, d)
         demanded = float(np.cumsum(d)[-1])
         analyzed = float(np.cumsum(a)[-1])
+        stage_n = pooled_n = 0
+        if self._emits_stages:
+            stage_n, pooled_n = self._pipeline_counts(cols.ids)
         self._close_tick(t0, t1, len(cols), demanded, analyzed, preemptions,
-                         migrations, defrags, outbids, calib_err, recals)
+                         migrations, defrags, outbids, calib_err, recals,
+                         stage_n, pooled_n)
 
     def _close_tick(self, t0: float, t1: float, n_streams: int,
                     demanded: float, analyzed: float, preemptions: int,
                     migrations: int, defrags: int, outbids: int,
-                    calib_err: float, recals: int) -> None:
+                    calib_err: float, recals: int,
+                    stage_items: int = 0, pooled_items: int = 0) -> None:
         cost, hours, by_market = self.cluster.accrue(t0, t1, self.market)
         live = self.cluster.live_count()
         self.ledger.add_tick(TickRecord(
@@ -497,6 +528,8 @@ class FleetSimulator:
             outbids=outbids,
             calib_rel_error=calib_err,
             recalibrations=recals,
+            stage_items=stage_items,
+            pooled_items=pooled_items,
         ), hours)
         if self.telemetry is not None:
             emit = self.telemetry.emit
@@ -512,3 +545,6 @@ class FleetSimulator:
             emit(t0, "fleet.calib.rel_error", calib_err)
             if recals:
                 emit(t0, "fleet.recalibrations", float(recals))
+            if stage_items:
+                emit(t0, "fleet.stage_items", float(stage_items))
+                emit(t0, "fleet.pooled_items", float(pooled_items))

@@ -82,6 +82,10 @@ class TickRecord:
                                   # observed at this tick's decision (0 when
                                   # no drift detector is attached)
     recalibrations: int = 0       # drift-triggered re-profile + replans
+    stage_items: int = 0          # of `streams`: pipeline *stage* items
+                                  # (demand models with ``emits_stages``)
+    pooled_items: int = 0         # of `stage_items`: consolidated pool chunks
+                                  # serving many cameras' crops
 
 
 class Ledger:
@@ -154,6 +158,16 @@ class Ledger:
     def calib_max_rel_error(self) -> float:
         return max((r.calib_rel_error for r in self.records), default=0.0)
 
+    @property
+    def stage_items_peak(self) -> int:
+        """Most pipeline stage items demanded at any one decision point."""
+        return max((r.stage_items for r in self.records), default=0)
+
+    @property
+    def pooled_items_peak(self) -> int:
+        """Most consolidated pool chunks live at any one decision point."""
+        return max((r.pooled_items for r in self.records), default=0)
+
     def slo_attainment(self) -> float:
         """Fraction of demanded frames actually analyzed on time.
 
@@ -192,6 +206,8 @@ class Ledger:
             "defrags": self.defrags,
             "recalibrations": self.recalibrations,
             "calib_max_rel_error": round(self.calib_max_rel_error, 6),
+            "stage_items_peak": self.stage_items_peak,
+            "pooled_items_peak": self.pooled_items_peak,
             "instance_hours": {"/".join(k): round(v, 6)
                                for k, v in sorted(self.instance_hours.items())},
         }

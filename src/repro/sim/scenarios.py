@@ -27,6 +27,14 @@ overrides (stream count, duration, seed) for scaling studies.
                           one region (``groups`` maps streams to regions):
                           the per-region drift / per-group recalibration
                           scenario.
+* ``roi_day``           — content-aware pipelines: cameras capture at a
+                          fixed rate, scene *density* swings sparse-night /
+                          dense-rush, and downstream heavy stages activate
+                          with it — the endogenous-demand scenario.
+* ``consolidated_city`` — the consolidation gate: many co-located cameras
+                          whose crop stages pool onto shared GPU workers
+                          (``consolidate=True``); run with
+                          ``consolidate=False`` for the unpooled arm.
 """
 from __future__ import annotations
 
@@ -40,8 +48,9 @@ from repro.core import geo
 from repro.core.catalog import Catalog, fig6_catalog
 from repro.core.workload import PROGRAMS
 from repro.sim.demand import (CameraSpec, DemandModel, DiurnalFleet,
-                              FlashCrowd, MixShift, PoissonChurn,
-                              columnar_fleet, peak_streams)
+                              FlashCrowd, MixShift, PipelineCameraSpec,
+                              PipelineFleet, PoissonChurn, columnar_fleet,
+                              peak_streams)
 from repro.sim.fleet import SimConfig
 
 US_CAMERAS = ("nyc", "chicago", "la", "seattle")
@@ -265,6 +274,71 @@ def regional_drift(n_streams: int = 96, duration_h: float = 24.0,
         groups=groups)
 
 
+def _pipeline_fleet(cameras: Sequence[str], n_streams: int, *,
+                    fps: float = 2.0, plate_every: int = 3,
+                    base_density: float = 0.05,
+                    peak_density: float = 1.0
+                    ) -> tuple[PipelineCameraSpec, ...]:
+    """n_streams pipeline cameras round-robined over ``cameras``, capturing
+    ``fps`` frames/s around the clock; every ``plate_every``-th runs the
+    three-stage ``roi_plate`` pipeline, the rest two-stage ``roi_vehicle``.
+    Scene density swings ``base_density`` -> ``peak_density`` diurnally."""
+    specs = []
+    cams = itertools.cycle(cameras)
+    for i in range(n_streams):
+        cam = next(cams)
+        if plate_every and i % plate_every == plate_every - 1:
+            specs.append(PipelineCameraSpec(
+                f"plate-{cam}-{i}", cam, "roi_plate", fps=fps,
+                base_density=base_density, peak_density=peak_density))
+        else:
+            specs.append(PipelineCameraSpec(
+                f"veh-{cam}-{i}", cam, "roi_vehicle", fps=fps,
+                base_density=base_density, peak_density=peak_density))
+    return tuple(specs)
+
+
+def roi_day(n_streams: int = 96, duration_h: float = 24.0,
+            seed: int = 0) -> Scenario:
+    """Content-aware pipelines over a US day: endogenous demand.
+
+    Cameras capture at a constant 2 frames/s; what swings diurnally is the
+    *scene density* (0.05 at night, 1.0 at rush hour), which drives the
+    activation of the downstream crop stages — the detector watches every
+    frame around the clock, the heavy classify/track/ocr stages fire almost
+    never at 3am and on every candidate at 8:30. The planner sees one item
+    per stage (``sid::stage``), so a scene getting busy IS a demand spike
+    without any frame-rate knob turning."""
+    return Scenario(
+        name="roi_day",
+        demand=PipelineFleet(_pipeline_fleet(US_CAMERAS, n_streams)),
+        config=SimConfig(duration_h=duration_h, seed=seed),
+        description="US pipeline fleet at fixed capture rate; scene density "
+                    "swings sparse-night/dense-rush and heavy stages "
+                    "activate with it (endogenous demand)")
+
+
+def consolidated_city(n_streams: int = 120, duration_h: float = 24.0,
+                      seed: int = 0, consolidate: bool = True) -> Scenario:
+    """The crop-consolidation gate: one metro area, many co-located cameras.
+
+    All cameras sit in four US cities (~30 per city) running ``roi_vehicle``;
+    with ``consolidate=True`` each city's VGG16 crop-classify stages pool
+    onto shared GPU workers (``pool::roi_vehicle.classify@nyc#k``) — one
+    model load serves every camera's crops, capped at the stage's pooled
+    frame-rate ceiling. The ``consolidate=False`` arm packs the same demand
+    as per-camera stage items; ``benchmarks/pipeline_consolidation.py``
+    gates the saving between the two arms."""
+    return Scenario(
+        name="consolidated_city",
+        demand=PipelineFleet(
+            _pipeline_fleet(US_CAMERAS, n_streams, plate_every=0),
+            consolidate=consolidate),
+        config=SimConfig(duration_h=duration_h, seed=seed),
+        description="co-located pipeline cameras; crop-classify stages "
+                    "consolidated onto shared GPU workers (on/off arms)")
+
+
 def _replicated(specs: Sequence[CameraSpec], replicas: int = 2
                 ) -> tuple[CameraSpec, ...]:
     """Each camera spec split into ``replicas`` load-sharing replicas
@@ -370,6 +444,8 @@ SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "churn_storm": churn_storm,
     "drifting_scene": drifting_scene,
     "regional_drift": regional_drift,
+    "roi_day": roi_day,
+    "consolidated_city": consolidated_city,
     "mega_city": mega_city,
     "spot_bidder": spot_bidder,
     "continent_scale": continent_scale,

@@ -9,9 +9,13 @@ which stays reachable through ``repro.core.packed.scalar_mode()``:
 * plans: same bins (choice key + member keys, in order) at the same cost,
   for fresh FFD, for the repair planner's seeded-bins delta pass, and for
   randomized fleets (hypothesis when available, seeded fallback otherwise);
-* demand: ``DiurnalFleet`` batched evaluation emits identical streams;
+* demand: ``DiurnalFleet`` batched evaluation emits identical streams,
+  and ``PipelineFleet`` (content-aware stage emission, with and without
+  crop consolidation) emits identical stage items at every hour;
 * ledgers: full seeded ``rush_hour`` and ``spot_heavy`` simulation runs
-  produce identical per-tick records and totals.
+  produce identical per-tick records and totals — and so do the pipeline
+  scenarios ``roi_day`` and ``consolidated_city``, whose demand items are
+  *stages* (``sid::stage`` / ``pool::...#k``), not streams.
 """
 import numpy as np
 import pytest
@@ -151,6 +155,29 @@ def test_batched_demand_matches_scalar():
         assert a == b
 
 
+@pytest.mark.parametrize("name", ["roi_day", "consolidated_city"])
+def test_pipeline_batched_demand_matches_scalar(name):
+    """PipelineFleet's columnar stage emission (activation arrays, pooled
+    chunk split) equals the scalar per-camera loop item for item — ids,
+    programs, and milli-fps rates — at every hour, pooling included."""
+    sc = SCENARIOS[name](n_streams=60)
+    for t in np.arange(0.0, 24.0, 1.5):
+        a = sc.demand.streams_at(float(t))
+        with packed.scalar_mode():
+            b = sc.demand.streams_at(float(t))
+        assert a == b
+
+
+def test_pipeline_stage_ffd_parity():
+    """FFD over stage items (including multi-chunk pools at peak density)
+    is bit-identical packed vs scalar — stage requirement classes factor
+    through the same ``class_requirement_columns`` path as streams."""
+    for name, t_h in (("roi_day", 8.5), ("consolidated_city", 17.5),
+                      ("consolidated_city", 3.0)):
+        sc = SCENARIOS[name](n_streams=48)
+        _assert_ffd_parity(sc.demand.streams_at(t_h))
+
+
 # -- end-to-end ledgers ------------------------------------------------------
 
 def _ledger_sig(ledger):
@@ -168,6 +195,8 @@ def _run_scenario(name, policy_cls, n_streams=48):
     ("rush_hour", ReactivePolicy),
     ("spot_heavy", ReactivePolicy),
     ("spot_heavy", RepairPolicy),
+    ("roi_day", ReactivePolicy),
+    ("consolidated_city", ReactivePolicy),
 ])
 def test_ledger_parity_seeded_runs(name, policy_cls):
     led_p = _run_scenario(name, policy_cls)

@@ -1,0 +1,321 @@
+"""Property tests for content-aware pipeline demand and crop consolidation.
+
+``hypothesis`` is optional (same pattern as test_repair_properties.py):
+when missing, seeded random instances exercise the same invariants. Over
+random pipelines, random pipeline fleets, and times of day:
+
+* a camera's stage demands sum exactly to its effective demand, and with
+  every activation pinned to 1.0 the effective demand is
+  ``source_fps * sum(rate_share)`` at *any* density;
+* effective demand is monotone in scene density, and activations stay
+  clipped to [0, 1] (negative/overdriven densities included);
+* ``consolidated_ffd`` (keep-the-cheaper) never costs more than packing
+  the per-camera stage view — on every generated instance;
+* no stage item is ever packed onto a bin violating its own per-stage
+  requirement, recomputed here from the pipeline spec and scene density
+  (not read back from the planner's cache);
+* pooled crop chunks conserve the pooled demand up to the milli-fps
+  truncation, never exceed the stage's per-worker cap, keep static ids
+  all day, and one pool's chunks never share a spot market (they reuse
+  the ``#k`` replica anti-affinity grammar).
+"""
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import Stream, fig6_catalog, validate
+from repro.core import geo
+from repro.core.markets import (mixed_plan, replica_group,
+                                spot_affinity_violations)
+from repro.core.strategies import consolidated_ffd, ffd_greedy
+from repro.core.workload import (PIPELINES, PROGRAMS, AnalysisPipeline,
+                                 PipelineStage, requirement_for,
+                                 scaled_program)
+from repro.sim.demand import PipelineCameraSpec, PipelineFleet, rush_hour_fps
+
+CAMERAS = tuple(sorted(geo.CAMERAS))
+CATALOG = fig6_catalog()
+TYPES = {t.name: t for t in CATALOG.types}
+
+
+def _random_pipeline(rng) -> AnalysisPipeline:
+    n_stages = int(rng.integers(1, 5))
+    stages = [PipelineStage("detect", PROGRAMS["ZF"])]   # always-on head
+    for j in range(1, n_stages):
+        prog = PROGRAMS["VGG16" if rng.random() < 0.5 else "ZF"]
+        stages.append(PipelineStage(
+            f"stage{j}", prog,
+            rate_share=round(float(rng.uniform(0.05, 1.0)), 3),
+            pixel_share=float(rng.choice([1.0, 0.5, 0.25, 0.125])),
+            activation_floor=round(float(rng.uniform(0.0, 0.3)), 3),
+            activation_gain=round(float(rng.uniform(0.0, 1.5)), 3),
+            consolidatable=bool(rng.random() < 0.5)))
+    return AnalysisPipeline("rand", tuple(stages))
+
+
+def _random_specs(rng, n: int) -> tuple[PipelineCameraSpec, ...]:
+    specs = []
+    for i in range(n):
+        cam = CAMERAS[int(rng.integers(0, len(CAMERAS)))]
+        pipe = "roi_plate" if rng.random() < 0.35 else "roi_vehicle"
+        lo, hi = sorted((round(float(rng.uniform(0.0, 1.0)), 3),
+                         round(float(rng.uniform(0.0, 1.0)), 3)))
+        specs.append(PipelineCameraSpec(
+            f"cam-{cam}-{i}", cam, pipe,
+            fps=round(float(rng.uniform(0.5, 4.0)), 3),
+            base_density=lo, peak_density=hi))
+    return tuple(specs)
+
+
+# -- pipeline demand model ----------------------------------------------------
+
+def _check_stage_demand_sums(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    pipe = _random_pipeline(rng)
+    fps = round(float(rng.uniform(0.5, 6.0)), 3)
+    for density in (0.0, 0.05, 0.3, 1.0):
+        rates = pipe.stage_rates(fps, density)
+        assert len(rates) == len(pipe.stages)
+        assert sum(f for _, f in rates) == \
+            pytest.approx(pipe.effective_fps(fps, density))
+    # pin every activation at 1.0: effective demand is density-independent
+    # and exactly the rate-share-weighted capture rate
+    pinned = AnalysisPipeline("pinned", tuple(
+        PipelineStage(s.name, s.program, rate_share=s.rate_share,
+                      pixel_share=s.pixel_share)
+        for s in pipe.stages))
+    want = fps * sum(s.rate_share for s in pinned.stages)
+    for density in (0.0, 0.4, 1.0):
+        assert pinned.effective_fps(fps, density) == pytest.approx(want)
+
+
+def _check_monotone_in_density(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    pipe = _random_pipeline(rng)
+    fps = round(float(rng.uniform(0.5, 6.0)), 3)
+    densities = sorted(float(rng.uniform(0.0, 1.0)) for _ in range(8))
+    effs = [pipe.effective_fps(fps, d) for d in densities]
+    assert all(a <= b + 1e-12 for a, b in zip(effs, effs[1:])), \
+        f"effective demand not monotone in density: {effs}"
+    for s in pipe.stages:                  # clipped even off the [0,1] range
+        for d in (-5.0, -0.1, 0.0, 1.0, 3.0):
+            assert 0.0 <= s.activation(d) <= 1.0
+
+
+def test_stage_demands_sum_to_stream_demand_seeded():
+    for seed in range(25):
+        _check_stage_demand_sums(seed)
+
+
+def test_effective_demand_monotone_in_density_seeded():
+    for seed in range(25):
+        _check_monotone_in_density(seed)
+
+
+def test_stock_pipelines_shape():
+    """The reference pipelines keep the structure the scenarios rely on:
+    an always-on full-frame detector plus consolidatable crop stages."""
+    for name, pipe in PIPELINES.items():
+        head = pipe.stages[0]
+        assert head.activation(0.0) == 1.0 and head.pixel_share == 1.0
+        assert any(s.consolidatable for s in pipe.stages)
+        for s in pipe.stages[1:]:
+            assert s.activation(0.0) < s.activation(1.0)   # content-driven
+            prog = s.resolved_program()
+            base = s.program
+            # crop scaling shrinks per-fps terms, never the model bases
+            assert prog.gpu_mem_base_gib == base.gpu_mem_base_gib
+            assert prog.gpu_frac_per_fps == pytest.approx(
+                base.gpu_frac_per_fps * s.pixel_share)
+        assert pipe.effective_fps(2.0, 0.0) < pipe.effective_fps(2.0, 1.0)
+
+
+def test_scaled_program_is_cached_per_pixel_share():
+    """Requirement classes factorize by id(program): repeated calls must
+    return the same object, and pixel_share=1.0 is the base itself."""
+    base = PROGRAMS["VGG16"]
+    assert scaled_program(base, 1.0) is base
+    assert scaled_program(base, 0.25) is scaled_program(base, 0.25)
+    assert scaled_program(base, 0.25) is not scaled_program(base, 0.5)
+    with pytest.raises(ValueError):
+        scaled_program(base, 0.0)
+
+
+# -- consolidation never loses ------------------------------------------------
+
+def _check_consolidation_never_worse(seed: int, n: int, t_h: float) -> None:
+    rng = np.random.default_rng(seed)
+    specs = _random_specs(rng, n)
+    stages = PipelineFleet(specs, consolidate=False).streams_at(t_h)
+    pooled = PipelineFleet(specs, consolidate=True).streams_at(t_h)
+    plan = consolidated_ffd(stages, CATALOG, pooled)
+    validate(plan.problem, plan.solution)
+    base = ffd_greedy(stages, CATALOG)
+    assert plan.hourly_cost <= base.hourly_cost + 1e-9, \
+        (f"consolidated plan ${plan.hourly_cost:.4f} beats "
+         f"${base.hourly_cost:.4f} stage packing")
+
+
+def test_consolidation_never_worse_seeded():
+    for seed in range(12):
+        _check_consolidation_never_worse(seed, n=6 + seed % 10,
+                                         t_h=float(seed % 24))
+
+
+# -- per-stage requirements hold on every packed bin --------------------------
+
+def _expected_stage_fps(spec: PipelineCameraSpec, stage: PipelineStage,
+                        t_h: float, width_h: float = 1.5) -> float:
+    dens = rush_hour_fps(geo.local_hour(t_h, spec.camera),
+                         spec.base_density, spec.peak_density,
+                         width_h=width_h)
+    return round(stage.stage_fps(spec.fps, dens), 3)
+
+
+def _check_stage_requirements_on_bins(seed: int, t_h: float) -> None:
+    rng = np.random.default_rng(seed)
+    specs = _random_specs(rng, 10)
+    by_sid = {s.stream_id: s for s in specs}
+    fleet = PipelineFleet(specs, consolidate=False)
+    streams = fleet.streams_at(t_h)
+    plan = ffd_greedy(streams, CATALOG)
+    validate(plan.problem, plan.solution)
+    checked = 0
+    for b in plan.solution.bins:
+        choice = plan.problem.choices[b.choice]
+        itype = TYPES[choice.type_name]
+        for i in b.items:
+            item = plan.problem.items[i]
+            sid, _, stage_name = item.key.rpartition("::")
+            spec = by_sid[sid]
+            stage = next(s for s in PIPELINES[spec.pipeline].stages
+                         if s.name == stage_name)
+            # the demand layer emitted the activation-weighted stage rate
+            fps = _expected_stage_fps(spec, stage, t_h)
+            want = requirement_for(stage.resolved_program(), fps, itype)
+            assert want is not None, \
+                f"{item.key} packed onto {choice.key} it cannot run on"
+            assert item.requirements[b.choice] == tuple(want)
+            checked += 1
+    assert checked == len(streams)
+
+
+def test_stage_requirements_hold_on_every_bin_seeded():
+    for seed, t_h in enumerate((0.0, 3.5, 8.25, 12.0, 17.75, 23.0)):
+        _check_stage_requirements_on_bins(seed, t_h)
+
+
+# -- pooled chunks: conservation, caps, stability, anti-affinity --------------
+
+def _pool_views(specs, t_h):
+    on = PipelineFleet(specs, consolidate=True).streams_at(t_h)
+    off = PipelineFleet(specs, consolidate=False).streams_at(t_h)
+    chunks = [s for s in on if s.stream_id.startswith("pool::")]
+    return on, off, chunks
+
+
+def _check_pool_invariants(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    specs = _random_specs(rng, 12)
+    ids0 = None
+    for t_h in (0.0, 6.5, 9.0, 13.25, 21.0):
+        on, off, chunks = _pool_views(specs, t_h)
+        ids = [s.stream_id for s in on]
+        if ids0 is None:
+            ids0 = ids
+        assert ids == ids0, "pooled ids must be static across the day"
+        # group chunks by pool prefix; compare against the pooled stage
+        # rates of the unconsolidated view
+        by_pool: dict[str, list[Stream]] = {}
+        for s in chunks:
+            by_pool.setdefault(replica_group(s.stream_id), []).append(s)
+        pooled_total: dict[str, float] = {}
+        for s in off:
+            sid, _, stage_name = s.stream_id.rpartition("::")
+            spec = by_sid_lookup(specs, sid)
+            stage = next(st_ for st_ in PIPELINES[spec.pipeline].stages
+                         if st_.name == stage_name)
+            if stage.consolidatable:
+                key = (f"pool::{spec.pipeline}.{stage_name}"
+                       f"@{spec.camera}")
+                pooled_total[key] = pooled_total.get(key, 0.0) + s.fps
+        assert set(by_pool) == set(pooled_total)
+        for key, members in by_pool.items():
+            spec0 = next(sp for sp in specs
+                         if key.endswith(f"@{sp.camera}")
+                         and key.startswith(f"pool::{sp.pipeline}."))
+            stage = next(st_ for st_ in PIPELINES[spec0.pipeline].stages
+                         if f".{st_.name}@" in key)
+            cap = stage.cap_fps()
+            m = len(members)
+            total = pooled_total[key]
+            got = sum(s.fps for s in members)
+            # conservation up to the milli-fps floor per chunk
+            assert got <= total + 1e-6
+            assert got >= total - m * 1e-3 - 1e-6
+            for s in members:
+                assert s.fps <= cap + 1e-9, \
+                    f"chunk {s.stream_id} over the {cap} fps pool cap"
+                assert s.program is stage.resolved_program()
+
+
+def by_sid_lookup(specs, sid):
+    for sp in specs:
+        if sp.stream_id == sid:
+            return sp
+    raise KeyError(sid)
+
+
+def test_pool_invariants_seeded():
+    for seed in range(10):
+        _check_pool_invariants(seed)
+
+
+def test_pool_chunks_respect_spot_anti_affinity():
+    """Chunks of one pool reuse the ``#k`` replica grammar, so the mixed
+    planner must never co-locate two of them on a single spot market."""
+    specs = tuple(PipelineCameraSpec(f"cam-nyc-{i}", "nyc", "roi_vehicle",
+                                     fps=4.0, base_density=1.0,
+                                     peak_density=1.0)
+                  for i in range(24))
+    pooled = PipelineFleet(specs, consolidate=True).streams_at(9.0)
+    chunks = [s for s in pooled if s.stream_id.startswith("pool::")]
+    assert len(chunks) >= 2, "need a multi-chunk pool to test anti-affinity"
+    assert len({replica_group(s.stream_id) for s in chunks}) == 1
+    res = mixed_plan(pooled, CATALOG,
+                     multipliers={loc: 0.4 for loc in CATALOG.locations})
+    assert spot_affinity_violations(res.plan) == []
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_stage_demands_sum_to_stream_demand(seed):
+        _check_stage_demand_sums(seed)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_effective_demand_monotone_in_density(seed):
+        _check_monotone_in_density(seed)
+
+    @given(st.integers(0, 10_000), st.integers(2, 16),
+           st.floats(0.0, 24.0, allow_nan=False))
+    @settings(max_examples=25, deadline=None)
+    def test_consolidation_never_worse(seed, n, t_h):
+        _check_consolidation_never_worse(seed, n, t_h)
+
+    @given(st.integers(0, 10_000), st.floats(0.0, 24.0, allow_nan=False))
+    @settings(max_examples=20, deadline=None)
+    def test_stage_requirements_hold_on_every_bin(seed, t_h):
+        _check_stage_requirements_on_bins(seed, t_h)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_pool_invariants(seed):
+        _check_pool_invariants(seed)
