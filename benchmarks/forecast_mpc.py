@@ -1,0 +1,213 @@
+"""Benchmark (BEYOND-PAPER): seasonal forecasting + model-predictive
+autoscaling vs the reactive baseline.
+
+Arms on three scenario days (fixed seeds, identical demand per arm):
+
+* **reactive** — ``ReactivePolicy``: replan when infeasible or when a
+  fresh plan saves >= 10%; capacity always trails demand by one boot
+  window, and on ``spot_heavy`` it rides hazard-preempted spot capacity.
+* **mpc** — ``SeasonalForecaster`` warmed on the *previous* day (every
+  scenario's demand is a pure seeded function of time, so replaying
+  yesterday is legitimate history) + ``MPCPolicy`` in mixed-market mode
+  with no on-demand floor: each tick plans the forecast envelope
+  (pre-booting capacity ahead of ramps), co-optimizes boot lead / replan
+  cadence / bid aggressiveness every 6 h from forecast plan costs, and
+  bids spot capacity via ``LookaheadBid`` so reclaims price the real
+  boot-window SLO loss. A live ``TelemetryHub`` feeds realized fleet
+  demand back into the forecaster's scale correction during the run.
+
+Scenarios: ``follow_the_sun`` (108 worldwide streams, rotating peaks +
+night program shift), ``spot_heavy`` (108 US streams, 85% spot with an
+0.12/h reclaim hazard), ``mega_city`` (1000 streams at benchmark scale:
+diurnal + mix shift + a 4x EU evening flash crowd the forecast must
+pre-boot for).
+
+Acceptance (asserted here and in CI via ``--smoke``): on every scenario
+the MPC arm's cost is <= the reactive arm's and its SLO attainment is
+>= reactive − 0.005; the MPC arm pre-boots on every scenario
+(``preboots > 0`` — the forecast is actually driving capacity ahead of
+demand); frames are conserved in both arms; and the whole suite finishes
+in under 120 s. ``--out`` writes the summary JSON (uploaded as a CI
+artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# runnable as `python benchmarks/forecast_mpc.py` from the repo root
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core.manager import ResourceManager
+from repro.obs import TelemetryHub
+from repro.sim import (FleetSimulator, MPCConfig, MPCPolicy, ReactivePolicy,
+                       SeasonalForecaster)
+from repro.sim.scenarios import follow_the_sun, mega_city, spot_heavy
+
+SEED = 0
+SCENARIO_ARMS = (("follow_the_sun", follow_the_sun, 108),
+                 ("spot_heavy", spot_heavy, 108),
+                 ("mega_city", mega_city, 1000))
+
+# acceptance bars (ISSUE 10): cost no worse than reactive, SLO within the
+# tolerance below reactive (it lands well above in practice), the forecast
+# actually pre-booting, and a CI wall-clock budget
+MAX_SLO_LOSS = 0.005
+TIME_BUDGET_S = 120.0
+
+# one MPC configuration for all three scenarios — the point of the
+# co-optimizer is that lead/cadence/bids adapt per scenario on their own
+MPC_CFG = MPCConfig(slo_floor=0.999)
+WARMUP_H = 24.0
+
+
+def _conserved(ledger) -> bool:
+    return all(abs(r.frames_demanded - r.frames_analyzed - r.frames_dropped)
+               < 1e-6 * max(1.0, r.frames_demanded) for r in ledger.records)
+
+
+def _summarize(ledger, elapsed: float) -> dict:
+    return {"totals": ledger.totals(),
+            "slo": ledger.slo_attainment(),
+            "frames_conserved": _conserved(ledger),
+            "elapsed_s": round(elapsed, 2)}
+
+
+def _run_scenario(factory, n_streams: int) -> dict:
+    sc = factory(n_streams, seed=SEED)
+    cat = sc.catalog()
+
+    t0 = time.perf_counter()
+    led_r = FleetSimulator(sc.demand, ReactivePolicy(ResourceManager(cat)),
+                           cat, sc.config).run()
+    reactive = _summarize(led_r, time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    forecaster = SeasonalForecaster()
+    forecaster.warmup(sc.demand, WARMUP_H)       # "yesterday's" demand
+    policy = MPCPolicy(ResourceManager(cat), forecaster=forecaster,
+                       spot=True, floor_frac=0.0, config=MPC_CFG)
+    hub = TelemetryHub()                          # live feature source
+    policy.attach_telemetry(hub)
+    led_m = FleetSimulator(sc.demand, policy, cat, sc.config,
+                           telemetry=hub).run()
+    mpc = _summarize(led_m, time.perf_counter() - t0)
+    mpc["chosen"] = {"lead_h": policy.lead_h, "cadence_h": policy.cadence_h,
+                     "slo_weight": policy.bidding.slo_weight}
+
+    return {"reactive": reactive, "mpc": mpc,
+            "cost_reduction": round(
+                1.0 - mpc["totals"]["total_cost"]
+                / reactive["totals"]["total_cost"], 4),
+            "slo_delta": round(mpc["slo"] - reactive["slo"], 6)}
+
+
+def compare_arms() -> dict:
+    return {name: _run_scenario(fab, n) for name, fab, n in SCENARIO_ARMS}
+
+
+def check_acceptance(arms: dict, total_elapsed: float) -> list[str]:
+    """Returns a list of violated acceptance bars (empty = pass)."""
+    bad = []
+    for name, res in arms.items():
+        m, r = res["mpc"], res["reactive"]
+        if m["totals"]["total_cost"] > r["totals"]["total_cost"]:
+            bad.append(f"{name}: mpc cost ${m['totals']['total_cost']:.2f} "
+                       f"> reactive ${r['totals']['total_cost']:.2f}")
+        if m["slo"] < r["slo"] - MAX_SLO_LOSS:
+            bad.append(f"{name}: mpc SLO {m['slo']:.6f} more than "
+                       f"{MAX_SLO_LOSS} below reactive {r['slo']:.6f}")
+        if m["totals"]["preboots"] <= 0:
+            bad.append(f"{name}: mpc never pre-booted capacity")
+        for arm in ("mpc", "reactive"):
+            if not res[arm]["frames_conserved"]:
+                bad.append(f"{name}/{arm}: frame conservation violated")
+    if total_elapsed > TIME_BUDGET_S:
+        bad.append(f"suite took {total_elapsed:.1f}s > {TIME_BUDGET_S:.0f}s")
+    return bad
+
+
+def run() -> list[dict]:
+    """Harness entry (benchmarks/run.py): CSV rows with acceptance flags."""
+    t0 = time.perf_counter()
+    arms = compare_arms()
+    violations = check_acceptance(arms, time.perf_counter() - t0)
+    rows = []
+    for name, res in arms.items():
+        m, r = res["mpc"], res["reactive"]
+        rows.append({
+            "name": f"forecast_mpc_{name}",
+            "us_per_call": m["elapsed_s"] * 1e6,
+            "derived": (f"{res['cost_reduction']:.1%} cheaper "
+                        f"SLO {m['slo']:.4f} vs {r['slo']:.4f} "
+                        f"preboots {m['totals']['preboots']} "
+                        f"lead {m['chosen']['lead_h']:g}h"),
+            "match_paper": (m["totals"]["total_cost"]
+                            <= r["totals"]["total_cost"]
+                            and m["slo"] >= r["slo"] - MAX_SLO_LOSS
+                            and m["totals"]["preboots"] > 0),
+        })
+    rows.append({
+        "name": "forecast_mpc_acceptance",
+        "us_per_call": (time.perf_counter() - t0) * 1e6,
+        "derived": "all bars met" if not violations else "; ".join(violations),
+        "match_paper": not violations,
+    })
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the acceptance comparison and exit non-zero "
+                         "on any violated bar (CI gate)")
+    ap.add_argument("--out", default=None,
+                    help="write the summary JSON here")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    arms = compare_arms()
+    total_elapsed = time.perf_counter() - t0
+    violations = check_acceptance(arms, total_elapsed)
+
+    for name, res in arms.items():
+        m, r = res["mpc"], res["reactive"]
+        print(f"{name:16s} reactive ${r['totals']['total_cost']:8.2f} "
+              f"SLO {r['slo']:.4f}  [{r['elapsed_s']}s]")
+        print(f"{'':16s} mpc      ${m['totals']['total_cost']:8.2f} "
+              f"SLO {m['slo']:.4f}  ({res['cost_reduction']:.1%} cheaper, "
+              f"SLO {res['slo_delta']:+.4f})  "
+              f"preboots {m['totals']['preboots']}  "
+              f"lead {m['chosen']['lead_h']:g}h "
+              f"cadence {m['chosen']['cadence_h']:g}h  [{m['elapsed_s']}s]")
+
+    summary = {"arms": arms, "violations": violations,
+               "elapsed_s": round(total_elapsed, 2),
+               "bars": {"max_cost_ratio": 1.0,
+                        "max_slo_loss": MAX_SLO_LOSS,
+                        "min_preboots": 1,
+                        "time_budget_s": TIME_BUDGET_S}}
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)) or ".",
+                    exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+        print(f"summary written to {args.out}")
+
+    if violations:
+        print("ACCEPTANCE " + ("FAILED" if args.smoke else "bars violated")
+              + ":\n  " + "\n  ".join(violations))
+        return 1 if args.smoke else 0
+    print(f"acceptance ok in {total_elapsed:.1f}s "
+          f"(budget {TIME_BUDGET_S:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -48,6 +48,8 @@ _SUITES: list[tuple[str, str, str]] = [
      "(beyond-paper)", "obs_export"),
     ("pipeline_consolidation", "content-aware pipelines: crop consolidation "
      "vs per-camera stages (beyond-paper)", "pipeline_consolidation"),
+    ("forecast_mpc", "seasonal forecast + MPC autoscaling vs reactive "
+     "(beyond-paper)", "forecast_mpc"),
     ("kernels", "pallas kernels (interpret-mode validation)",
      "kernel_sweep"),
 ]

@@ -86,6 +86,14 @@ class AdaptiveManager:
     mixed: Optional[object] = None               # markets.MixedConfig
     multipliers_fn: Optional[Callable[[], dict]] = None
 
+    # Capacity hold (model-predictive pre-booting, sim/mpc.py): while
+    # ``t < hold_until`` voluntary cost-saving replans are *not adopted* —
+    # capacity planned ahead of a forecast peak must survive the dip before
+    # it instead of being drained as savings. Forced replans (infeasible
+    # demand, preemption replays) and mixed-mode zero-migration repricing
+    # are unaffected. The default never holds.
+    hold_until: float = float("-inf")
+
     current: Optional[Plan] = None
     events: list = dataclasses.field(default_factory=list)
     # consumed by the next step(): marks its event as recalibration-forced
@@ -297,7 +305,8 @@ class AdaptiveManager:
                                              candidate.hourly_cost, migrations,
                                              defrag=defrag,
                                              recalibration=recal))
-        elif (candidate.hourly_cost
+        elif (t >= self.hold_until
+              and candidate.hourly_cost
               < self.current.hourly_cost * (1 - self.savings_threshold)) \
                 or (self.mixed is not None and migrations == 0
                     and candidate.hourly_cost != self.current.hourly_cost):

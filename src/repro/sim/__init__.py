@@ -11,23 +11,26 @@ from repro.sim.autoscaler import (PredictiveEWMAPolicy, ReactivePolicy,
                                   RepairPolicy, ScheduledPolicy,
                                   StaticPeakPolicy)
 from repro.sim.bidding import (FixedMarginBid, LookaheadBid, PercentileBid,
-                               SpotBidPolicy)
+                               SpotBidPolicy, compute_bids)
 from repro.sim.cluster import Cluster, SimInstance, SpotMarket
 from repro.sim.demand import (CameraSpec, DiurnalFleet, FlashCrowd, MixShift,
                               PipelineCameraSpec, PipelineFleet, PoissonChurn,
                               peak_streams, rush_hour_fps)
 from repro.sim.events import Event, EventQueue
 from repro.sim.fleet import FleetSimulator, SimConfig
+from repro.sim.forecast import SeasonalForecaster
 from repro.sim.ledger import Ledger, ServiceCalibration, TickRecord
+from repro.sim.mpc import MPCConfig, MPCPolicy
 from repro.sim.scenarios import SCENARIOS, Scenario
 
 __all__ = [
     "CameraSpec", "Cluster", "DiurnalFleet", "Event", "EventQueue",
     "FixedMarginBid", "FlashCrowd", "FleetSimulator", "Ledger",
-    "LookaheadBid", "MixShift", "PercentileBid", "PipelineCameraSpec",
-    "PipelineFleet", "PoissonChurn",
+    "LookaheadBid", "MPCConfig", "MPCPolicy", "MixShift", "PercentileBid",
+    "PipelineCameraSpec", "PipelineFleet", "PoissonChurn",
     "PredictiveEWMAPolicy", "ReactivePolicy", "RepairPolicy", "SCENARIOS",
-    "Scenario", "ScheduledPolicy", "ServiceCalibration", "SimConfig",
+    "Scenario", "ScheduledPolicy", "SeasonalForecaster",
+    "ServiceCalibration", "SimConfig",
     "SimInstance", "SpotBidPolicy", "SpotMarket", "StaticPeakPolicy",
-    "TickRecord", "peak_streams", "rush_hour_fps",
+    "TickRecord", "compute_bids", "peak_streams", "rush_hour_fps",
 ]

@@ -102,7 +102,13 @@ class RepairPolicy(ReactivePolicy):
 
 class ScheduledPolicy(ReactivePolicy):
     """Voluntary replans only on a fixed cadence (e.g. every 6 simulated
-    hours); demand infeasibility and preemptions still replan immediately."""
+    hours); demand infeasibility and preemptions still replan immediately.
+
+    The cadence phase — and the adaptive plan state — reset whenever
+    simulated time moves backwards, i.e. when one policy object is reused
+    across :class:`~repro.sim.fleet.FleetSimulator` runs: the second run's
+    first decision must behave exactly like a fresh policy's, not inherit
+    the prior run's phase (or its final plan)."""
 
     def __init__(self, manager: ResourceManager, every_h: float = 6.0,
                  strategy: str = "FFD",
@@ -121,37 +127,87 @@ class ScheduledPolicy(ReactivePolicy):
                          savings_threshold=savings_threshold,
                          replan_trigger=on_schedule, name="scheduled")
         self.every_h = every_h
+        self._last_voluntary = last
+        self._last_decide_t: Optional[float] = None
+
+    def decide(self, t: float, streams: Sequence[Stream], *,
+               preempted: bool = False) -> Plan:
+        if self._last_decide_t is not None and t < self._last_decide_t - 1e-9:
+            # a new run started: reset the cadence phase and the plan state
+            # (the events list is replaced, not cleared, so a finished
+            # simulator's view of the old trace stays intact)
+            self._last_voluntary[0] = None
+            self.adaptive.current = None
+            self.adaptive.events = []
+        self._last_decide_t = t
+        return super().decide(t, streams, preempted=preempted)
 
 
 class PredictiveEWMAPolicy(ReactivePolicy):
-    """Plan for a one-tick-ahead forecast: EWMA-smoothed per-stream trend in
-    frames/s, floored at current demand so falling forecasts never
-    under-provision, capped at ``cap_fps`` frames/s."""
+    """Plan for a ``lead_h``-hours-ahead forecast: EWMA-smoothed per-stream
+    trend in frames/s **per hour**, floored at current demand so falling
+    forecasts never under-provision, capped at ``cap_fps`` frames/s.
+
+    Time units matter here. The observed trend is ``Δfps / Δt`` between
+    decisions and the extrapolation horizon ``lead_h`` is in simulated
+    hours, so the forecast is a function of the demand *path*, not of the
+    control-loop period: halving ``dt_h`` (or running PR 8's fractional
+    final tick) yields the same forecasts at the same times. The EWMA decay
+    is time-based too — ``(1 - alpha)`` per hour of elapsed time — so the
+    smoothing window is a wall-clock quantity. At the legacy 1-hour tick
+    every expression reduces bit-for-bit to the historical per-observation
+    form (``lead_ticks`` remains as a deprecated alias for that era's
+    callers: one tick meant one hour).
+    """
 
     def __init__(self, manager: ResourceManager, strategy: str = "FFD",
                  savings_threshold: float = 0.10, alpha: float = 0.3,
-                 lead_ticks: float = 2.0, cap_fps: float = 12.0) -> None:
+                 lead_h: Optional[float] = None, cap_fps: float = 12.0,
+                 lead_ticks: Optional[float] = None) -> None:
         super().__init__(manager, strategy=strategy,
                          savings_threshold=savings_threshold,
                          name="predictive-ewma")
         self.alpha = alpha
-        self.lead_ticks = lead_ticks
+        if lead_h is None:
+            # deprecated alias: a "tick" of lead is interpreted at the
+            # legacy 1-hour control period
+            lead_h = float(lead_ticks) if lead_ticks is not None else 2.0
+        self.lead_h = lead_h
         self.cap_fps = cap_fps
         self._prev_fps: dict[str, float] = {}
-        self._trend: dict[str, float] = {}
+        self._trend: dict[str, float] = {}        # frames/s per hour
+        self._last_t: Optional[float] = None
 
-    def forecast(self, streams: Sequence[Stream]) -> list[Stream]:
+    @property
+    def lead_ticks(self) -> float:
+        """Deprecated alias for :attr:`lead_h` (ticks were hours)."""
+        return self.lead_h
+
+    @lead_ticks.setter
+    def lead_ticks(self, value: float) -> None:
+        self.lead_h = float(value)
+
+    def forecast(self, streams: Sequence[Stream],
+                 dt_h: float = 1.0) -> list[Stream]:
+        """One observation + extrapolation pass. ``dt_h`` is the simulated
+        time since the previous observation (the legacy default of 1.0
+        reproduces the historical per-tick behavior exactly)."""
+        if dt_h == 1.0:
+            # bit-identical to the historical per-observation update
+            decay, gain = 1.0 - self.alpha, self.alpha
+        else:
+            decay = (1.0 - self.alpha) ** dt_h
+            gain = 1.0 - decay
         out = []
         present = set()
         for s in streams:
             present.add(s.stream_id)
             prev = self._prev_fps.get(s.stream_id, s.fps)
-            trend = s.fps - prev
-            ewma = ((1 - self.alpha) * self._trend.get(s.stream_id, 0.0)
-                    + self.alpha * trend)
+            trend = (s.fps - prev) / dt_h         # frames/s per hour
+            ewma = decay * self._trend.get(s.stream_id, 0.0) + gain * trend
             self._trend[s.stream_id] = ewma
             self._prev_fps[s.stream_id] = s.fps
-            f = max(s.fps, s.fps + ewma * self.lead_ticks)
+            f = max(s.fps, s.fps + ewma * self.lead_h)
             out.append(dataclasses.replace(
                 s, fps=round(min(f, self.cap_fps), 3)))
         # evict state for departed streams: a churned-out camera that later
@@ -165,4 +221,19 @@ class PredictiveEWMAPolicy(ReactivePolicy):
 
     def decide(self, t: float, streams: Sequence[Stream], *,
                preempted: bool = False) -> Plan:
-        return self.adaptive.step(t, self.forecast(streams), force=preempted)
+        if self._last_t is not None and t < self._last_t - 1e-9:
+            # the policy object was reused for a new run: trends observed
+            # across the time jump would be garbage
+            self._prev_fps.clear()
+            self._trend.clear()
+            self._last_t = None
+        # the realized interval since the last decision (PR 8's accumulation
+        # schedule keeps decisions at k*dt, but this stays correct even for
+        # irregular calls); the first observation has no interval — its
+        # trend is zero regardless, so any positive dt is equivalent
+        dt_h = (t - self._last_t) if self._last_t is not None else 1.0
+        if dt_h <= 0:
+            dt_h = 1.0
+        self._last_t = t
+        return self.adaptive.step(t, self.forecast(streams, dt_h),
+                                  force=preempted)

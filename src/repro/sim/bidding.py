@@ -85,16 +85,21 @@ class LookaheadBid:
 
     For each candidate margin the expected cost is
     ``MarketQuote.effective_price``: survive and pay the (slightly higher)
-    expected market price, or get reclaimed and pay on-demand plus a
-    boot-window penalty of ``boot_delay_h / dt`` of the on-demand price —
-    the dollars-per-hour value of the frames the replacement instance
-    cannot serve while booting. Low margins save nothing (you pay the
-    market either way) and risk the penalty, so the optimum sits high —
-    but below the cap when the walk is calm."""
+    expected market price, or get reclaimed and pay on-demand plus the
+    dt-independent **dollar cost of one reclaim** —
+    ``slo_weight * ondemand_price * boot_delay_h``, the on-demand dollars'
+    worth of the boot window the replacement instance spends not serving.
+    The expected-price model is evaluated over a fixed ``horizon_h``
+    decision horizon (not the control-loop tick), so the same policy picks
+    the same margins whether the simulator ticks hourly or every five
+    minutes. Low margins save nothing (you pay the market either way) and
+    risk the penalty, so the optimum sits high — but below the cap when
+    the walk is calm."""
 
     def __init__(self, margins: Sequence[float] = (0.1, 0.2, 0.3, 0.4,
                                                    0.5, 0.75, 1.0),
-                 boot_delay_h: float = 0.05, slo_weight: float = 1.0) -> None:
+                 boot_delay_h: float = 0.05, slo_weight: float = 1.0,
+                 horizon_h: float = 1.0) -> None:
         self.name = "lookahead"
         self.margins = tuple(margins)
         # default matches SimConfig.boot_delay_h; SpotBidPolicy overwrites
@@ -102,17 +107,44 @@ class LookaheadBid:
         # the penalty model prices the outage the ledger will really charge
         self.boot_delay_h = boot_delay_h
         self.slo_weight = slo_weight
+        self.horizon_h = horizon_h
+
+    def reclaim_cost(self, quote: MarketQuote) -> float:
+        """The dt-independent dollars one reclaim of this quote costs."""
+        return self.slo_weight * quote.ondemand_price * self.boot_delay_h
 
     def bid(self, quote: MarketQuote, history: Sequence[float],
             dt_h: float) -> float:
-        penalty = (self.slo_weight * quote.ondemand_price
-                   * self.boot_delay_h / max(dt_h, 1e-9))
+        penalty = self.reclaim_cost(quote)
         best = min(
             self.margins,
             key=lambda m: (quote.effective_price(
                 min(quote.price * (1.0 + m), quote.ondemand_price),
-                dt_h, preempt_penalty=penalty), m))
+                self.horizon_h, preempt_penalty=penalty), m))
         return min(quote.price * (1.0 + best), quote.ondemand_price)
+
+
+def compute_bids(catalog, market, bidding, dt_h: float
+                 ) -> dict[tuple[str, str], float]:
+    """One bid per (instance type, region) spot quote at the attached
+    market's current multipliers — the shared bid-refresh step of
+    :class:`SpotBidPolicy` and :class:`~repro.sim.mpc.MPCPolicy`. Returns
+    ``{}`` when no market is attached (pure on-demand operation)."""
+    if market is None:
+        return {}
+    mults = market.multipliers()
+    if not mults:
+        return {}
+    history = {r: [h[r] for h in market.price_history if r in h]
+               for r in mults}
+    vol = getattr(market, "volatility", 0.15)
+    out: dict[tuple[str, str], float] = {}
+    for q in quotes(catalog, mults, volatility=vol):
+        if q.market != SPOT:
+            continue
+        out[(q.type_name, q.location)] = bidding.bid(
+            q, history.get(q.location, ()), dt_h)
+    return out
 
 
 @dataclasses.dataclass
@@ -165,20 +197,8 @@ class SpotBidPolicy:
         return self._market.multipliers() if self._market is not None else {}
 
     def _refresh_bids(self) -> None:
-        mults = self._multipliers()
-        if not mults:
-            self.bids = {}
-            return
-        history = {r: [h[r] for h in self._market.price_history if r in h]
-                   for r in mults}
-        vol = getattr(self._market, "volatility", 0.15)
-        out: dict[tuple[str, str], float] = {}
-        for q in quotes(self.manager.catalog, mults, volatility=vol):
-            if q.market != SPOT:
-                continue
-            out[(q.type_name, q.location)] = self.bidding.bid(
-                q, history.get(q.location, ()), self._dt_h)
-        self.bids = out
+        self.bids = compute_bids(self.manager.catalog, self._market,
+                                 self.bidding, self._dt_h)
 
     # -- the policy interface ------------------------------------------------
 

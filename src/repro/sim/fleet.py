@@ -192,8 +192,9 @@ class FleetSimulator:
         return seq
 
     def _policy_interval_stats(self, adaptive, events_seen: int
-                               ) -> tuple[int, int, int, float]:
-        """(events_seen', defrags, recals, calib_err) after a decide()."""
+                               ) -> tuple[int, int, int, float, int, float]:
+        """(events_seen', defrags, recals, calib_err, preboots, fcast_err)
+        after a decide()."""
         defrags = recals = 0
         if adaptive is not None:
             new_events = adaptive.events[events_seen:]
@@ -206,7 +207,13 @@ class FleetSimulator:
         # just took; the ledger gets the calibration error column
         verdict = getattr(self.policy, "last_drift", None)
         calib_err = verdict.rel_error if verdict is not None else 0.0
-        return events_seen, defrags, recals, calib_err
+        # forecast-driven policies (sim/mpc.py) publish how many items they
+        # planned above current demand and the realized error of the
+        # forecast the outgoing plan rode on; plain policies leave both 0
+        preboots = int(getattr(self.policy, "last_preboot", 0) or 0)
+        fcast_err = float(getattr(self.policy, "last_forecast_error", 0.0)
+                          or 0.0)
+        return events_seen, defrags, recals, calib_err, preboots, fcast_err
 
     # -- object-path loop ---------------------------------------------------
 
@@ -226,6 +233,8 @@ class FleetSimulator:
         calib_err_this_interval = 0.0
         recals_this_interval = 0
         outbids_this_interval = 0
+        preboots_this_interval = 0
+        fcast_err_this_interval = 0.0
         # adaptive policies expose their decision trace; the ledger records
         # when the repair planner's defrag escape hatch fired
         adaptive = getattr(self.policy, "adaptive", None)
@@ -248,7 +257,9 @@ class FleetSimulator:
                               defrags_this_interval,
                               outbids_this_interval,
                               calib_err_this_interval,
-                              recals_this_interval)
+                              recals_this_interval,
+                              preboots_this_interval,
+                              fcast_err_this_interval)
                 preemptions_this_interval = 0
                 outbids_this_interval = 0
                 # rows terminated before the interval just billed can never
@@ -266,7 +277,8 @@ class FleetSimulator:
                                       preempted=preempted_since_decide > 0)
             preempted_since_decide = 0
             (events_seen, defrags_this_interval, recals_this_interval,
-             calib_err_this_interval) = self._policy_interval_stats(
+             calib_err_this_interval, preboots_this_interval,
+             fcast_err_this_interval) = self._policy_interval_stats(
                 adaptive, events_seen)
             assignment = self.cluster.reconcile(
                 t, plan, drain_h=cfg.boot_delay_h,
@@ -304,6 +316,8 @@ class FleetSimulator:
         calib_err_this_interval = 0.0
         recals_this_interval = 0
         outbids_this_interval = 0
+        preboots_this_interval = 0
+        fcast_err_this_interval = 0.0
         adaptive = getattr(self.policy, "adaptive", None)
         events_seen = 0
         pending: list = []
@@ -324,7 +338,9 @@ class FleetSimulator:
                                    defrags_this_interval,
                                    outbids_this_interval,
                                    calib_err_this_interval,
-                                   recals_this_interval)
+                                   recals_this_interval,
+                                   preboots_this_interval,
+                                   fcast_err_this_interval)
                 preemptions_this_interval = 0
                 outbids_this_interval = 0
                 # retire remaps cluster._prev_cols (our cur_rows array) in
@@ -348,7 +364,8 @@ class FleetSimulator:
                                       preempted=preempted_since_decide > 0)
             preempted_since_decide = 0
             (events_seen, defrags_this_interval, recals_this_interval,
-             calib_err_this_interval) = self._policy_interval_stats(
+             calib_err_this_interval, preboots_this_interval,
+             fcast_err_this_interval) = self._policy_interval_stats(
                 adaptive, events_seen)
             cur_rows = cluster.reconcile_rows(
                 t, plan, cur.ids, drain_h=cfg.boot_delay_h,
@@ -418,7 +435,8 @@ class FleetSimulator:
                  prev_assignment, prev_fps, preemptions: int,
                  migrations: int, defrags: int = 0,
                  outbids: int = 0, calib_err: float = 0.0,
-                 recals: int = 0) -> None:
+                 recals: int = 0, preboots: int = 0,
+                 fcast_err: float = 0.0) -> None:
         """Frames and dollars for [t0, t1).
 
         While a stream's planned instance is still booting, its *previous*
@@ -459,18 +477,21 @@ class FleetSimulator:
                 [s.stream_id for s in streams])
         self._close_tick(t0, t1, len(streams), demanded, analyzed,
                          preemptions, migrations, defrags, outbids,
-                         calib_err, recals, stage_n, pooled_n)
+                         calib_err, recals, stage_n, pooled_n,
+                         preboots, fcast_err)
 
     def _account_cols(self, t0: float, t1: float, cols, rows,
                       pids, prows, pfps, preemptions: int, migrations: int,
                       defrags: int, outbids: int, calib_err: float,
-                      recals: int) -> None:
+                      recals: int, preboots: int = 0,
+                      fcast_err: float = 0.0) -> None:
         """Columnar twin of :meth:`_account`: the same per-stream float
         expressions as array ops, summed in stream order (cumsum) so the
         totals are bit-identical to the scalar loop."""
         if cols is None or len(cols) == 0:
             self._close_tick(t0, t1, 0, 0.0, 0.0, preemptions, migrations,
-                             defrags, outbids, calib_err, recals)
+                             defrags, outbids, calib_err, recals,
+                             preboots=preboots, fcast_err=fcast_err)
             return
         dt_s = (t1 - t0) * 3600.0
         c = self.cluster
@@ -508,13 +529,14 @@ class FleetSimulator:
             stage_n, pooled_n = self._pipeline_counts(cols.ids)
         self._close_tick(t0, t1, len(cols), demanded, analyzed, preemptions,
                          migrations, defrags, outbids, calib_err, recals,
-                         stage_n, pooled_n)
+                         stage_n, pooled_n, preboots, fcast_err)
 
     def _close_tick(self, t0: float, t1: float, n_streams: int,
                     demanded: float, analyzed: float, preemptions: int,
                     migrations: int, defrags: int, outbids: int,
                     calib_err: float, recals: int,
-                    stage_items: int = 0, pooled_items: int = 0) -> None:
+                    stage_items: int = 0, pooled_items: int = 0,
+                    preboots: int = 0, fcast_err: float = 0.0) -> None:
         cost, hours, by_market = self.cluster.accrue(t0, t1, self.market)
         live = self.cluster.live_count()
         self.ledger.add_tick(TickRecord(
@@ -530,6 +552,8 @@ class FleetSimulator:
             recalibrations=recals,
             stage_items=stage_items,
             pooled_items=pooled_items,
+            preboots=preboots,
+            forecast_rel_error=fcast_err,
         ), hours)
         if self.telemetry is not None:
             emit = self.telemetry.emit
@@ -548,3 +572,7 @@ class FleetSimulator:
             if stage_items:
                 emit(t0, "fleet.stage_items", float(stage_items))
                 emit(t0, "fleet.pooled_items", float(pooled_items))
+            if preboots:
+                emit(t0, "fleet.preboots", float(preboots))
+            if fcast_err:
+                emit(t0, "fleet.forecast.rel_error", fcast_err)

@@ -86,6 +86,13 @@ class TickRecord:
                                   # (demand models with ``emits_stages``)
     pooled_items: int = 0         # of `stage_items`: consolidated pool chunks
                                   # serving many cameras' crops
+    preboots: int = 0             # demand items planned above current demand
+                                  # at this tick's decision: capacity booting
+                                  # *ahead* of a forecast ramp (sim/mpc.py);
+                                  # 0 for every non-predictive policy
+    forecast_rel_error: float = 0.0   # |forecast - realized| / realized total
+                                      # demand for the forecast this tick's
+                                      # plan rode on (0 when no forecaster)
 
 
 class Ledger:
@@ -168,6 +175,15 @@ class Ledger:
         """Most consolidated pool chunks live at any one decision point."""
         return max((r.pooled_items for r in self.records), default=0)
 
+    @property
+    def preboots(self) -> int:
+        """Total demand items planned ahead of current demand (MPC)."""
+        return sum(r.preboots for r in self.records)
+
+    @property
+    def forecast_max_rel_error(self) -> float:
+        return max((r.forecast_rel_error for r in self.records), default=0.0)
+
     def slo_attainment(self) -> float:
         """Fraction of demanded frames actually analyzed on time.
 
@@ -208,6 +224,8 @@ class Ledger:
             "calib_max_rel_error": round(self.calib_max_rel_error, 6),
             "stage_items_peak": self.stage_items_peak,
             "pooled_items_peak": self.pooled_items_peak,
+            "preboots": self.preboots,
+            "forecast_max_rel_error": round(self.forecast_max_rel_error, 6),
             "instance_hours": {"/".join(k): round(v, 6)
                                for k, v in sorted(self.instance_hours.items())},
         }

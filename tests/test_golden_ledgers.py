@@ -208,5 +208,9 @@ def test_ledger_totals_match_golden(scenario, policy):
     # policy they stay identically zero on the golden scenarios
     assert totals["recalibrations"] == 0
     assert totals["calib_max_rel_error"] == 0.0
+    # and the PR-10 forecasting columns: without an MPC policy no capacity
+    # is pre-booted and no forecast error is ever scored
+    assert totals["preboots"] == 0
+    assert totals["forecast_max_rel_error"] == 0.0
     if (scenario, policy) in GOLDEN_HOURS:
         assert totals["instance_hours"] == GOLDEN_HOURS[(scenario, policy)]
